@@ -1,0 +1,70 @@
+"""Fig. 14 analogue: middleware cost ratio vs number of distributed nodes.
+
+Middleware time = everything the engine does besides daemon compute:
+block gathering/packing, cache bookkeeping, lazy-upload planning, the
+global merge. We time the daemon (jitted block program) separately and
+report (total - daemon) / total per shard count and per algorithm — the
+paper's 10-20%, falling with node count.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import DATASETS, save
+from repro.core.engine import EngineOptions, GXEngine
+from repro.graph.algorithms import label_prop, pagerank, sssp_bf
+
+
+def _daemon_time(eng: GXEngine, iterations: int) -> float:
+    """Pure daemon compute: the jitted block program on this shard's
+    blocks, outside the engine's control plane."""
+    prog = eng.program
+    state, aux = prog.init(eng.graph)
+    state_dev, aux_dev = jnp.asarray(state), jnp.asarray(aux)
+    total = 0.0
+    for bs in eng.blocksets:
+        arrs = (jnp.asarray(bs.vids), jnp.asarray(bs.lsrc),
+                jnp.asarray(bs.ldst), jnp.asarray(bs.weights),
+                jnp.asarray(bs.emask))
+        # warm
+        p, c = eng._block_fn(state_dev, aux_dev, *arrs)
+        p.block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(iterations):
+            p, c = eng._block_fn(state_dev, aux_dev, *arrs)
+        p.block_until_ready()
+        total += time.perf_counter() - t0
+    return total
+
+
+def run(shard_counts=(1, 2, 4, 8, 16)) -> dict:
+    g = DATASETS["orkut-mini"]()
+    out = {}
+    for name, algf, iters in (("pagerank", pagerank, 5),
+                              ("sssp_bf", sssp_bf, 8),
+                              ("label_prop", label_prop, 5)):
+        rows = {}
+        for ns in shard_counts:
+            prog = algf(g)
+            eng = GXEngine(g, prog, num_shards=ns,
+                           options=EngineOptions(block_size=8192))
+            t0 = time.perf_counter()
+            res = eng.run(max_iterations=iters)
+            total = time.perf_counter() - t0
+            daemon = _daemon_time(eng, res.iterations)
+            ratio = max(0.0, (total - daemon) / total)
+            rows[ns] = {"total_s": total, "daemon_s": daemon,
+                        "middleware_ratio": ratio}
+        out[name] = rows
+    save("bench_cost_ratio", out)
+    return out
+
+
+if __name__ == "__main__":
+    for alg, rows in run().items():
+        trend = " ".join(f"{ns}:{r['middleware_ratio']:.0%}"
+                         for ns, r in rows.items())
+        print(f"{alg:12s} middleware ratio by shards: {trend}")

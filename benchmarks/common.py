@@ -1,0 +1,45 @@
+"""Shared benchmark helpers: graph construction, timing, result output."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.graph import generate  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "benchmarks")
+
+# CPU-feasible stand-ins for the paper's datasets (Table I): same families
+# (power-law social / uniform / clustered / road), reduced scale.
+DATASETS = {
+    "orkut-mini": lambda: generate.rmat(20_000, 200_000, seed=1),
+    "uniform-mini": lambda: generate.uniform(20_000, 200_000, seed=2),
+    "clustered-mini": lambda: generate.clustered(20_000, 200_000,
+                                                 num_clusters=8, seed=3),
+    "road-mini": lambda: generate.grid_road(140, seed=4),
+}
+
+
+def save(name: str, payload: dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def timeit(fn, *, repeat: int = 3, warmup: int = 1):
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))

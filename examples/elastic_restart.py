@@ -1,0 +1,90 @@
+"""Elasticity end-to-end: train → host failure → re-mesh → restore → resume.
+
+Simulates the 1000-node failure story at laptop scale: a 4-host fleet loses
+a host mid-run; the FleetMonitor re-plans the mesh (Lemma-2 rebalancing for
+stragglers, pow2 re-mesh for failures), and training resumes from the last
+checkpoint with the data cursor intact — zero replayed or skipped batches.
+
+  PYTHONPATH=src python examples/elastic_restart.py
+"""
+import os
+import shutil
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_reduced  # noqa: E402
+from repro.dist import fault  # noqa: E402
+from repro.models.model import Model  # noqa: E402
+from repro.train import checkpoint as ckpt  # noqa: E402
+from repro.train.data import ShardedLoader, SyntheticLM  # noqa: E402
+from repro.train.optimizer import AdamW, AdamWConfig  # noqa: E402
+from repro.train.step import make_train_step  # noqa: E402
+
+CKPT = "/tmp/repro_elastic_ckpt"
+
+
+def main():
+    shutil.rmtree(CKPT, ignore_errors=True)
+    cfg = get_reduced("stablelm-1.6b").replace(dtype="float32",
+                                               param_dtype="float32")
+    model = Model(cfg)
+    opt = AdamW(AdamWConfig(peak_lr=1e-3, warmup_steps=2, total_steps=40))
+    step = jax.jit(make_train_step(model, opt))
+
+    # --- phase 1: 4-host fleet, one straggler ------------------------------
+    monitor = fault.FleetMonitor(num_hosts=4, model_parallel=1)
+    data = SyntheticLM(cfg.vocab_size, seq_len=32, global_batch=8, seed=7)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    for s in range(10):
+        batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+        params, opt_state, m = step(params, opt_state, batch)
+        # hosts report step times; host 2 is a straggler
+        for h, t in enumerate([1.0, 1.05, 2.6, 0.95]):
+            monitor.record(h, t)
+    ckpt.save(CKPT, 10, params=params, opt_state=opt_state,
+              data_state=data.state_dict())
+    frac = monitor.batch_fractions()
+    print(f"phase 1: loss={float(m['loss']):.3f}; straggler mask "
+          f"{monitor.stragglers().tolist()}; Lemma-2 batch fractions "
+          f"{np.round(frac, 3).tolist()}")
+
+    # --- phase 2: host 2 dies; re-mesh + restore + resume ------------------
+    monitor.mark_failed(2)
+    plan = monitor.remesh(devices_per_host=128)  # 4×128 → 3×128 survivors
+    print(f"phase 2: host 2 failed → re-mesh plan {plan.shape} "
+          f"({plan.devices_used} devices)")
+    restored = ckpt.restore(CKPT, like_params=params, like_opt=opt_state)
+    params2, opt2 = restored["params"], restored["opt_state"]
+    data2 = SyntheticLM(cfg.vocab_size, 32, 8)
+    data2.load_state_dict(restored["data_state"])
+    loaders = [ShardedLoader(data2, host_id=h, num_hosts=3) for h in range(3)]
+    for s in range(10, 20):
+        # each surviving host would materialize its shard; the global batch
+        # (and therefore the trajectory) is identical to an uninterrupted run
+        batch = {k: jnp.asarray(v) for k, v in data2.next_batch().items()}
+        params2, opt2, m2 = step(params2, opt2, batch)
+    print(f"phase 3: resumed steps 10→20 on survivors; loss="
+          f"{float(m2['loss']):.3f}")
+
+    # --- verify: identical to an uninterrupted run -------------------------
+    data_ref = SyntheticLM(cfg.vocab_size, 32, 8, seed=7)
+    params_ref, _ = model.init(jax.random.PRNGKey(0))
+    opt_ref = opt.init(params_ref)
+    for s in range(20):
+        batch = {k: jnp.asarray(v) for k, v in data_ref.next_batch().items()}
+        params_ref, opt_ref, _ = step(params_ref, opt_ref, batch)
+    diff = max(float(jnp.max(jnp.abs(a - b)))
+               for a, b in zip(jax.tree.leaves(params2),
+                               jax.tree.leaves(params_ref)))
+    print(f"verification: max |param diff| vs uninterrupted run = {diff:.2e} "
+          f"({'EXACT RESUME' if diff == 0 else 'mismatch!'})")
+
+
+if __name__ == "__main__":
+    main()

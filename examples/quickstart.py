@@ -1,0 +1,49 @@
+"""Quickstart: the GX-Plug middleware in 40 lines.
+
+Runs PageRank and multi-source SSSP through the daemon-agent engine with
+every optimization on (pipeline blocks, sync caching/skipping, lazy
+upload), and verifies against the pure-jnp reference.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core.engine import EngineOptions, GXEngine, run_reference  # noqa: E402
+from repro.graph import generate  # noqa: E402
+from repro.graph.algorithms import pagerank, sssp_bf  # noqa: E402
+
+
+def main():
+    # a power-law graph, like the paper's social-network datasets
+    g = generate.rmat(num_vertices=10_000, num_edges=100_000, seed=0)
+    print(f"graph: |V|={g.num_vertices:,} |E|={g.num_edges:,}")
+
+    for name, make in (("pagerank", pagerank), ("sssp-bf(4src)", sssp_bf)):
+        prog = make(g)
+        engine = GXEngine(
+            g, prog, num_shards=4,
+            options=EngineOptions(
+                model="bsp",              # or "gas" (PowerGraph ordering)
+                execution="vectorized",   # the accelerator path
+                block_size="auto",        # Lemma-1 optimal edge blocks
+                sync_caching=True,
+                sync_skipping=True,
+            ))
+        res = engine.run(max_iterations=50)
+        ref, _ = run_reference(g, prog, max_iterations=50)
+        ok = np.allclose(np.where(np.isfinite(res.state), res.state, 0),
+                         np.where(np.isfinite(ref), ref, 0), atol=1e-4)
+        st = res.stats
+        print(f"{name:14s} iters={res.iterations:3d} "
+              f"wall={res.wall_time:.2f}s correct={ok} "
+              f"sync-skipped={st.rounds_skipped}/{st.rounds_total} "
+              f"sync-volume-saved={1 - st.lazy_bytes / max(st.dense_bytes, 1):.0%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Batched serving example (deliverable (b)): prefill + greedy decode.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch mamba2-1.3b --gen 32
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main  # noqa: E402
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--reduced" not in argv:
+        argv.append("--reduced")
+    main(argv)

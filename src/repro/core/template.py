@@ -1,0 +1,91 @@
+"""The GX-Plug algorithm template (paper Sec. IV-A).
+
+A graph algorithm is expressed through three APIs:
+
+  * ``msg_gen``   (MSGGen)   — per-edge message generation from the edge
+                               triplet (src state, dst state, edge weight).
+  * ``msg_merge`` (MSGMerge) — a *monoid* combining messages destined to the
+                               same vertex (min / max / sum). Keeping merge a
+                               monoid is what lets the engine split work into
+                               blocks, merge per-block partials, and merge
+                               across shards with a collective — all without
+                               changing the result.
+  * ``msg_apply`` (MSGApply) — per-vertex state update from the merged
+                               message; also reports per-vertex activity
+                               (the frontier) used for convergence, block
+                               skipping, and synchronization skipping.
+
+The *call order* of the three realizes different computation models
+(Sec. IV-B2): BSP runs Gen→Merge→Apply inside one superstep; GAS runs
+Merge→Apply→Gen (scatter at the end, producing messages consumed by the
+next iteration). ``repro.core.engine`` implements both orders on the same
+template, as the paper's middleware does for GraphX vs PowerGraph.
+
+State layout: vertex state is a dense ``(N, K)`` float32 array; messages are
+``(E, K)``; static per-vertex features (degrees, seed labels) live in an
+``(N, A)`` aux array. Dense fixed-width state is the TPU-native choice: it
+keeps every block a fixed shape, so one compiled program serves all blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Monoid:
+    """Commutative, associative merge with identity (MSGMerge semantics)."""
+
+    name: str
+    identity: float
+    combine: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    # Idempotent monoids (min/max) tolerate stale re-delivery and duplicated
+    # contributions; only they are eligible for synchronization skipping.
+    idempotent: bool
+
+    def segment_reduce(self, msgs: jnp.ndarray, seg_ids: jnp.ndarray, num_segments: int):
+        if self.name == "sum":
+            return jax.ops.segment_sum(msgs, seg_ids, num_segments)
+        if self.name == "min":
+            return jax.ops.segment_min(msgs, seg_ids, num_segments)
+        if self.name == "max":
+            return jax.ops.segment_max(msgs, seg_ids, num_segments)
+        raise ValueError(self.name)
+
+
+SUM = Monoid("sum", 0.0, lambda a, b: a + b, idempotent=False)
+MIN = Monoid("min", float(np.finfo(np.float32).max), jnp.minimum, idempotent=True)
+MAX = Monoid("max", float(np.finfo(np.float32).min), jnp.maximum, idempotent=True)
+
+MONOIDS = {m.name: m for m in (SUM, MIN, MAX)}
+
+
+@dataclasses.dataclass(frozen=True)
+class VertexProgram:
+    """An algorithm instance of the template.
+
+    Functions are jnp-vectorized over the leading (edge or vertex) axis so
+    the same code runs on the reference engine, on CPU blocks, inside
+    ``shard_map`` bodies, and inside the Pallas edge-block kernel.
+    """
+
+    name: str
+    state_width: int  # K
+    aux_width: int  # A (0 allowed)
+    monoid: Monoid
+    # msg_gen(src_state (E,K), dst_state (E,K), weight (E,1), src_aux (E,A)) -> (E,K)
+    msg_gen: Callable[..., jnp.ndarray]
+    # msg_apply(state (N,K), merged (N,K), has_msg (N,1) bool, aux (N,A), t) -> (state', active (N,))
+    msg_apply: Callable[..., tuple[jnp.ndarray, jnp.ndarray]]
+    # init(graph) -> (state (N,K) np.float32, aux (N,A) np.float32)
+    init: Callable[..., tuple[np.ndarray, np.ndarray]]
+    max_iterations: int = 100
+    # Only edges whose src was active last iteration generate messages.
+    frontier_driven: bool = True
+
+    def supports_sync_skipping(self) -> bool:
+        return self.monoid.idempotent

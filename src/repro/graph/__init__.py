@@ -1,0 +1,1 @@
+"""Graph substrate: structures, generators, partitioners, algorithms."""

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: the GX-Plug daemon block program.
+
+One grid step processes one edge block with its paired vertex block resident
+in VMEM (paper Sec. II-B: "each edge block is associated with a paired
+vertex block"). TPU adaptation (DESIGN.md §2):
+
+* gathers through block-local indices become **one-hot matmuls** on the MXU
+  (src_onehot @ vertex_block), not HBM random access;
+* the per-destination MSGMerge becomes a dense masked reduction:
+  sum-monoid → one-hot-transpose matmul (MXU); min/max → masked VPU
+  reduction per state column;
+* the Pallas grid pipeline overlaps the HBM→VMEM DMA of block *i+1* with
+  compute on block *i* — the hardware form of the paper's pipeline shuffle.
+
+VMEM budget per grid step (f32): VB·K + VB·A + 3·B + B·VB (one-hot) +
+B·K — with the default B=512, VB=512, K≤8 this is ≲1.5 MiB, comfortably
+inside the ~16 MiB VMEM of a TPU core, leaving room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.template import VertexProgram
+
+
+def _kernel(vstate_ref, vaux_ref, lsrc_ref, ldst_ref, w_ref, emask_ref,
+            partial_ref, counts_ref, *, program: VertexProgram):
+    monoid = program.monoid
+    k = program.state_width
+    vstate = vstate_ref[0].astype(jnp.float32)  # (VB, K)
+    vaux = vaux_ref[0].astype(jnp.float32)  # (VB, A)
+    lsrc = lsrc_ref[0]  # (B,)
+    ldst = ldst_ref[0]
+    w = w_ref[0].astype(jnp.float32)  # (B, 1)
+    emask = emask_ref[0].astype(jnp.float32)  # (B,)
+
+    b = lsrc.shape[0]
+    vb = vstate.shape[0]
+    col = jax.lax.broadcasted_iota(jnp.int32, (b, vb), 1)
+    src_oh = (lsrc[:, None] == col).astype(jnp.float32)  # (B, VB)
+    dst_oh = (ldst[:, None] == col).astype(jnp.float32)
+
+    # Gather via MXU: (B, VB) @ (VB, K)
+    s = src_oh @ vstate
+    d = dst_oh @ vstate
+    sa = src_oh @ vaux
+
+    msgs = program.msg_gen(s, d, w, sa)  # (B, K)
+
+    if monoid.name == "sum":
+        masked = msgs * emask[:, None]
+        partial = dst_oh.T @ masked  # (VB, K) scatter-add on MXU
+    else:
+        # masked reduction per column: (VB, B) select matrix
+        sel = (dst_oh.T > 0.0) & (emask[None, :] > 0.0)  # (VB, B)
+        cols = []
+        for i in range(k):  # K is small & static
+            mat = jnp.where(sel, msgs[:, i][None, :], monoid.identity)
+            red = jnp.min(mat, axis=1) if monoid.name == "min" else jnp.max(mat, axis=1)
+            cols.append(red)
+        partial = jnp.stack(cols, axis=1)
+    counts = (dst_oh.T @ emask[:, None])[:, 0]  # (VB,)
+
+    partial_ref[0] = partial.astype(partial_ref.dtype)
+    counts_ref[0] = counts.astype(jnp.int32)
+
+
+def edge_block_pallas(vstate, vaux, lsrc, ldst, w, emask_f32, *,
+                      program: VertexProgram, interpret: bool = True):
+    """Runs the daemon program over all blocks.
+
+    Args (pre-gathered by the agent — see ops.edge_block_aggregate):
+      vstate (nb, VB, K) f32, vaux (nb, VB, A) f32,
+      lsrc/ldst (nb, B) i32, w (nb, B, 1) f32, emask_f32 (nb, B) f32.
+    Returns: partial (nb, VB, K) f32, counts (nb, VB) i32.
+    """
+    nb, vb, k = vstate.shape
+    a = vaux.shape[2]
+    b = lsrc.shape[1]
+    kern = functools.partial(_kernel, program=program)
+    out_shape = [
+        jax.ShapeDtypeStruct((nb, vb, k), jnp.float32),
+        jax.ShapeDtypeStruct((nb, vb), jnp.int32),
+    ]
+    grid = (nb,)
+    in_specs = [
+        pl.BlockSpec((1, vb, k), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, vb, a), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, b), lambda i: (i, 0)),
+        pl.BlockSpec((1, b), lambda i: (i, 0)),
+        pl.BlockSpec((1, b, 1), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, b), lambda i: (i, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, vb, k), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, vb), lambda i: (i, 0)),
+    ]
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(vstate, vaux, lsrc, ldst, w, emask_f32)

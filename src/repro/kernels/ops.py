@@ -1,0 +1,103 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Backend policy: on CPU (this container) Pallas runs in ``interpret=True``
+mode for correctness validation; models/benchmarks can also select the
+pure-jnp reference implementations (``impl="reference"``), which is what
+the 512-device dry-run lowers (see DESIGN.md §8 — kernels are validated at
+small scale in interpret mode; roofline terms come from the XLA path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.template import VertexProgram
+from repro.kernels import ref
+from repro.kernels.edge_block import edge_block_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssd_scan import ssd_chunk_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# --------------------------------------------------------------------------
+# edge_block
+# --------------------------------------------------------------------------
+def edge_block_aggregate(state, aux, vids, lsrc, ldst, w, emask, *,
+                         program: VertexProgram, impl: str = "pallas"):
+    """Agent-side wrapper: gathers the paired vertex blocks, then runs the
+    daemon program (Pallas) over the block grid."""
+    if impl == "reference":
+        return ref.edge_block_aggregate(state, aux, vids, lsrc, ldst, w,
+                                        emask, program=program)
+    if aux.shape[1] == 0:  # zero-width aux: Pallas BlockSpecs need dims >= 1
+        aux = jnp.zeros((state.shape[0], 1), state.dtype)
+    vstate = state[vids]  # (nb, VB, K) — agent "download" into block layout
+    vaux = aux[vids]
+    emf = emask.astype(jnp.float32)
+    return edge_block_pallas(vstate, vaux, lsrc, ldst, w.astype(jnp.float32),
+                             emf, program=program,
+                             interpret=_default_interpret())
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("causal", "impl", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, impl: str = "pallas",
+                    block_q: int = 128, block_k: int = 128):
+    if impl == "reference":
+        return ref.flash_attention(q, k, v, causal=causal)
+    return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k,
+                                  interpret=_default_interpret())
+
+
+# --------------------------------------------------------------------------
+# SSD scan (Mamba2)
+# --------------------------------------------------------------------------
+def ssd_scan(x, dt, a, b_mat, c_mat, *, chunk: int = 64, impl: str = "pallas"):
+    """Full SSD: within-chunk kernel + cross-chunk jnp recurrence.
+
+    x (B, S, H, P), dt (B, S, H), a (H,), b_mat/c_mat (B, S, G, N).
+    Returns y (B, S, H, P).
+    """
+    if impl == "reference":
+        return ref.ssd_scan_chunked_ref(x, dt, a, b_mat, c_mat, chunk=chunk)
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    assert s % chunk == 0
+    nc = s // chunk
+    bh = jnp.repeat(b_mat, rep, axis=2).astype(jnp.float32)
+    ch = jnp.repeat(c_mat, rep, axis=2).astype(jnp.float32)
+
+    def to_chunks(t):
+        return t.reshape(bsz, nc, chunk, *t.shape[2:])
+
+    xc = to_chunks(x.astype(jnp.float32))
+    dtc = to_chunks(dt.astype(jnp.float32))
+    bc, cc = to_chunks(bh), to_chunks(ch)
+
+    y_local, states, decays, gates = ssd_chunk_pallas(
+        xc, dtc, a, bc, cc, interpret=_default_interpret())
+
+    # Cross-chunk recurrence (the agent-side combine).
+    def body(hstate, inp):
+        st, dec = inp  # (B,H,N,P), (B,H)
+        hnext = hstate * dec[..., None, None] + st
+        return hnext, hstate  # emit carry-in for this chunk
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, carry_in = jax.lax.scan(
+        body, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(decays, 1, 0)))
+    carry_in = jnp.moveaxis(carry_in, 0, 1)  # (B, NC, H, N, P)
+
+    y_carry = jnp.einsum("bclhn,bclh,bchnp->bclhp",
+                         cc, gates, carry_in)
+    y = (y_local + y_carry).reshape(bsz, s, h, p)
+    return y.astype(x.dtype)

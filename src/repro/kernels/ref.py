@@ -1,0 +1,179 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function here defines the *semantics*; the Pallas kernels in this
+package must match these outputs (tests sweep shapes/dtypes and
+``assert_allclose`` against them).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.template import VertexProgram
+
+
+# --------------------------------------------------------------------------
+# edge_block: per-block Gen + block-local Merge (the GX-Plug daemon program)
+# --------------------------------------------------------------------------
+def edge_block_aggregate(state, aux, vids, lsrc, ldst, w, emask, *,
+                         program: VertexProgram):
+    """Oracle for kernels/edge_block.py.
+
+    Args:
+      state (N, K) f32, aux (N, A) f32 — the shard vertex table.
+      vids  (nb, VB) i32 — vertex blocks (global ids).
+      lsrc, ldst (nb, B) i32 — block-local edge endpoints.
+      w (nb, B, 1) f32, emask (nb, B) bool.
+    Returns:
+      partial (nb, VB, K) f32 — per-block merged messages (monoid).
+      counts  (nb, VB) i32    — messages received per vertex slot.
+    """
+    monoid = program.monoid
+    k = program.state_width
+    nb, vb = vids.shape
+    b = lsrc.shape[1]
+    vstate = state[vids]
+    vaux = aux[vids]
+    s = jnp.take_along_axis(vstate, lsrc[..., None], axis=1)
+    d = jnp.take_along_axis(vstate, ldst[..., None], axis=1)
+    sa = jnp.take_along_axis(vaux, lsrc[..., None], axis=1)
+    msgs = program.msg_gen(
+        s.reshape(nb * b, k), d.reshape(nb * b, k),
+        w.reshape(nb * b, 1), sa.reshape(nb * b, -1)).reshape(nb, b, k)
+    msgs = jnp.where(emask[..., None], msgs, monoid.identity)
+    seg = (ldst + jnp.arange(nb, dtype=ldst.dtype)[:, None] * vb).reshape(-1)
+    partial = monoid.segment_reduce(msgs.reshape(nb * b, k), seg, nb * vb)
+    counts = jax.ops.segment_sum(
+        emask.reshape(-1).astype(jnp.int32), seg, nb * vb)
+    # Empty segments: jax fills min/max with ±inf; the contract (and the
+    # kernel) uses the monoid identity. Normalize so oracles match exactly.
+    partial = jnp.where((counts > 0)[:, None], partial, monoid.identity)
+    return partial.reshape(nb, vb, k), counts.reshape(nb, vb)
+
+
+# --------------------------------------------------------------------------
+# flash_attention: causal multi-head attention forward
+# --------------------------------------------------------------------------
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """Oracle: plain softmax attention.
+
+    q (B, Hq, S, D); k, v (B, Hkv, S, D) with Hq % Hkv == 0 (GQA).
+    Returns (B, Hq, S, D) in q's dtype.
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vf).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# ssd_chunk: Mamba2 SSD (state-space duality) — chunked exact computation
+# --------------------------------------------------------------------------
+def ssd_scan_reference(x, dt, a, b_mat, c_mat, *, chunk: int = 64):
+    """Oracle: sequential SSD recurrence (naive scan over time).
+
+    Mamba2 SSD per head:  h_t = exp(a*dt_t) * h_{t-1} + dt_t * B_t x_t^T
+                          y_t = C_t h_t
+    Shapes: x (B, S, H, P), dt (B, S, H) >0, a (H,) <0,
+            b_mat/c_mat (B, S, G, N) with H % G == 0.
+    Returns y (B, S, H, P).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    bh = jnp.repeat(b_mat, rep, axis=2)  # (B,S,H,N)
+    ch = jnp.repeat(c_mat, rep, axis=2)
+
+    def step(hstate, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P),(B,H),(B,H,N),(B,H,N)
+        decay = jnp.exp(a[None, :] * dtt)  # (B,H)
+        hstate = hstate * decay[..., None, None] + (
+            (dtt[..., None] * bt)[..., :, None] * xt[..., None, :])  # (B,H,N,P)
+        yt = jnp.einsum("bhn,bhnp->bhp", ct, hstate)
+        return hstate, yt
+
+    h0 = jnp.zeros((bsz, h, n, p), dtype=jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(bh, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(ch, 1, 0).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def ssd_chunk_local(x, dt, a, b_mat, c_mat):
+    """Oracle for the *within-chunk* quadratic part of SSD (no carry-in).
+
+    Per chunk of length L: y_t = sum_{s<=t} C_t·B_s (prod_{r in (s,t]}
+    decay_r) dt_s x_s — the "attention-like" dual form. Inputs are per-chunk:
+    x (B, L, H, P), dt (B, L, H), a (H,), b_mat/c_mat (B, L, H, N) (heads
+    already expanded). Returns (y (B, L, H, P), state_out (B, H, N, P),
+    decay_total (B, H)).
+    """
+    bsz, l, h, p = x.shape
+    logd = a[None, None, :] * dt  # (B,L,H) log decay per step
+    cum = jnp.cumsum(logd, axis=1)  # (B,L,H) inclusive
+    # L_mat[t,s] = exp(cum[t]-cum[s]) for s<=t  (decay product over (s, t])
+    diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B,L,L,H)
+    causal = jnp.tril(jnp.ones((l, l), dtype=bool))[None, :, :, None]
+    # double-where: exp(diff) overflows for masked (s>t) entries, and
+    # inf·0 = NaN in the VJP — zero diff in the dead region first.
+    diff = jnp.where(causal, diff, 0.0)
+    gate = jnp.where(causal, jnp.exp(diff), 0.0)
+    cb = jnp.einsum("blhn,bshn->blsh", c_mat, b_mat)  # (B,L,S,H)
+    w = cb * gate * dt[:, None, :, :]  # weight for source s → target t
+    y = jnp.einsum("blsh,bshp->blhp", w, x)
+    # carry-out state: sum_s decay(s..L] dt_s B_s x_s^T
+    tail = jnp.exp(cum[:, -1:, :] - cum)  # (B,L,H) decay from s+1..L
+    sb = (dt * tail)[..., None] * b_mat  # (B,L,H,N)
+    state = jnp.einsum("blhn,blhp->bhnp", sb, x)
+    return y.astype(x.dtype), state, jnp.exp(cum[:, -1, :])
+
+
+def ssd_scan_chunked_ref(x, dt, a, b_mat, c_mat, *, chunk: int = 64,
+                         return_final_state: bool = False):
+    """Chunked SSD in pure jnp (within-chunk dual form + cross-chunk scan).
+    Must equal ssd_scan_reference; the Pallas kernel accelerates the
+    within-chunk part. ``return_final_state`` additionally returns the
+    (B, H, N, P) state after the last position (prefill → decode handoff)."""
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    bh = jnp.repeat(b_mat, rep, axis=2).astype(jnp.float32)
+    ch = jnp.repeat(c_mat, rep, axis=2).astype(jnp.float32)
+    assert s % chunk == 0, "seq must divide by chunk"
+    nc = s // chunk
+
+    def reshape_c(t):
+        return t.reshape(bsz, nc, chunk, *t.shape[2:])
+
+    xc, dtc, bc, cc = map(reshape_c, (x.astype(jnp.float32), dt.astype(jnp.float32), bh, ch))
+
+    def body(hstate, inp):
+        xi, dti, bi, ci = inp  # (B,L,...)
+        y_local, state_out, decay_tot = ssd_chunk_local(xi, dti, a, bi, ci)
+        # contribution of carry-in state to each position t in the chunk
+        cum = jnp.cumsum(a[None, None, :] * dti, axis=1)  # (B,L,H)
+        carry_gate = jnp.exp(cum)  # decay from chunk start to t (inclusive)
+        y_carry = jnp.einsum("blhn,bhnp->blhp", ci * carry_gate[..., None], hstate)
+        hnew = hstate * decay_tot[..., None, None] + state_out
+        return hnew, (y_local + y_carry)
+
+    h0 = jnp.zeros((bsz, h, n, p), dtype=jnp.float32)
+    seq = tuple(jnp.moveaxis(t, 1, 0) for t in (xc, dtc, bc, cc))
+    h_final, ys = jax.lax.scan(body, h0, seq)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, p)
+    if return_final_state:
+        # transpose to decode-state layout (B, H, N, P)
+        return y.astype(x.dtype), h_final
+    return y.astype(x.dtype)

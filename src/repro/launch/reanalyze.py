@@ -1,0 +1,49 @@
+"""Re-run HLO accounting over saved dry-run artifacts (no recompilation).
+
+The compile step is the slow part; the analyzer evolves (e.g. the
+promoted-all-reduce correction). This rewrites each <cell>.json from its
+saved <cell>.hlo.txt.gz.
+
+  PYTHONPATH=src python -m repro.launch.reanalyze [dir]
+"""
+import glob
+import gzip
+import json
+import os
+import sys
+
+from repro.launch import dryrun, hlo_analysis
+
+
+def reanalyze_dir(d: str) -> int:
+    n = 0
+    for jpath in sorted(glob.glob(os.path.join(d, "*.json"))):
+        hpath = jpath[:-5] + ".hlo.txt.gz"
+        if not os.path.exists(hpath):
+            continue
+        with open(jpath) as f:
+            rec = json.load(f)
+        with gzip.open(hpath, "rt") as f:
+            hlo = f.read()
+        stats = hlo_analysis.analyze(hlo, world=rec["world"])
+        rec["hlo"] = {
+            "dot_flops_per_device": stats.dot_flops,
+            "conv_flops_per_device": stats.conv_flops,
+            "dot_bytes_per_device": stats.dot_bytes,
+            "collective_wire_bytes_per_device": stats.collective_bytes,
+            "collective_by_kind": stats.collective_by_kind,
+            "collective_sites": stats.collective_count,
+            "promoted_inflation_bytes": stats.promoted_inflation_bytes,
+            "while_trips": stats.while_trips,
+        }
+        rec["roofline"] = dryrun.roofline_terms(rec)
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    return n
+
+
+if __name__ == "__main__":
+    target = sys.argv[1] if len(sys.argv) > 1 else os.path.abspath(
+        dryrun.RESULTS_DIR)
+    print(f"re-analyzed {reanalyze_dir(target)} records under {target}")

@@ -1,0 +1,111 @@
+"""ShapeDtypeStruct input specs per (arch × shape) — the dry-run contract.
+
+``input_specs`` returns weak-type-correct, shardable stand-ins for every
+model input with matching logical axes: train batches, prefill prompts, and
+decode (token + KV/SSM cache + position). No device allocation happens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import Shape
+from repro.dist import sharding as shd
+from repro.models.common import ModelConfig
+from repro.models.model import Model
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecSet:
+    args: Any        # pytree of ShapeDtypeStruct
+    axes: Any        # parallel pytree of logical-axis tuples
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: Shape, *, with_labels: bool) -> SpecSet:
+    b, s = shape.global_batch, shape.seq_len
+    args = {"tokens": _sds((b, s), jnp.int32)}
+    axes = {"tokens": (shd.BATCH, None)}
+    if with_labels:
+        args["labels"] = _sds((b, s), jnp.int32)
+        axes["labels"] = (shd.BATCH, None)
+    if cfg.family == "encdec":
+        args["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), cfg.jdtype)
+        axes["frames"] = (shd.BATCH, None, None)
+    if cfg.family == "vlm":
+        args["patch_embeds"] = _sds((b, cfg.num_patches, cfg.d_model), cfg.jdtype)
+        axes["patch_embeds"] = (shd.BATCH, None, None)
+    return SpecSet(args, axes)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> SpecSet:
+    """Abstract decode-cache (shapes via eval_shape; axes via side channel —
+    no allocation)."""
+    model = Model(cfg)
+    box = {}
+
+    def build():
+        cache, axes = model.init_cache(batch, cache_len)
+        box["axes"] = axes
+        return cache
+
+    shapes = jax.eval_shape(build)
+    return SpecSet(shapes, box["axes"])
+
+
+def params_specs(cfg: ModelConfig) -> SpecSet:
+    shapes, axes = Model(cfg).init_abstract()
+    return SpecSet(shapes, axes)
+
+
+def decode_specs(cfg: ModelConfig, shape: Shape) -> dict[str, SpecSet]:
+    b = shape.global_batch
+    token = SpecSet(_sds((b, 1), jnp.int32), (shd.BATCH, None))
+    pos = SpecSet(_sds((), jnp.int32), ())
+    cache = cache_specs(cfg, b, shape.seq_len)
+    extras = {}
+    if cfg.family == "encdec":
+        # decode re-reads the (stub) encoder memory via the cross-KV cache —
+        # already part of cache_specs (xk/xv).
+        pass
+    return {"token": token, "pos": pos, "cache": cache, **extras}
+
+
+def input_specs(cfg: ModelConfig, shape: Shape) -> dict[str, SpecSet]:
+    """All ShapeDtypeStruct stand-ins needed to lower the step for a cell."""
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, shape, with_labels=True)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, shape, with_labels=False)}
+    if shape.kind == "decode":
+        return decode_specs(cfg, shape)
+    raise ValueError(shape.kind)
+
+
+# --------------------------------------------------------------------------
+# memory-driven microbatch choice (Lemma-1 analog at the training level)
+# --------------------------------------------------------------------------
+def choose_microbatches(cfg: ModelConfig, shape: Shape, *, data_shards: int,
+                        activation_budget: int = 4 << 30) -> int:
+    """Smallest microbatch count whose per-device scan carry fits the budget.
+
+    Saved state per layer per microbatch ≈ B_local × S × d_model × 2 bytes
+    (bf16 residual carry, remat saves nothing else); total × num_layers.
+    """
+    if shape.kind != "train":
+        return 1
+    b_local = max(1, shape.global_batch // data_shards)
+    per_layer = shape.seq_len * cfg.d_model * 2
+    total = cfg.num_layers * per_layer
+    mb = 1
+    while mb < b_local and (b_local // mb) * total > activation_budget:
+        mb *= 2
+    while b_local % mb:
+        mb //= 2
+    return max(1, mb)

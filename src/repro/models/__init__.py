@@ -1,0 +1,1 @@
+"""Model substrate for the assigned architectures."""

@@ -1,0 +1,187 @@
+"""GQA attention: train (chunked causal), prefill (+cache fill), decode.
+
+Memory strategy: for long sequences the (S × S) score matrix never
+materializes — queries are processed in chunks via ``lax.scan`` (an
+online-softmax-free formulation: each q-chunk attends to the full K with a
+causal mask, so per-step memory is (B, H, qc, S)). On TPU the Pallas
+flash-attention kernel (kernels/flash_attention.py) replaces this jnp path;
+the jnp path is what the 512-device dry-run lowers and what CPU tests run.
+
+The q-chunk trade-off is the paper's Lemma-1 block-size question in
+miniature: small chunks → less VMEM/temp memory but more per-step overhead;
+large chunks → the reverse. ``q_chunk_for`` picks the chunk from a byte
+budget the same way the engine picks edge-block sizes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import sharding as shd
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg) -> tuple[dict, dict]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, hkv = cfg.num_heads, cfg.num_kv_heads
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dt = cfg.jparam_dtype
+    scale = 1.0 / np.sqrt(d)
+    p = {
+        "wq": L._normal(kq, (d, h, hd), scale, dt),
+        "wk": L._normal(kk, (d, hkv, hd), scale, dt),
+        "wv": L._normal(kv, (d, hkv, hd), scale, dt),
+        "wo": L._normal(ko, (h, hd, d), 1.0 / np.sqrt(h * hd), dt),
+    }
+    # No HEAD_DIM sharding anywhere in attention: head_dim is the score
+    # CONTRACTION dim, and sharding it turns every QK^T into a per-chunk
+    # (B,H,q,S) psum over the model axis (measured 250 s/step collective on
+    # phi4-mini prefill, whose 24 heads don't divide the 16-wide axis).
+    # When heads don't divide, they replicate — Megatron GQA practice.
+    a = {
+        "wq": (shd.FSDP, shd.HEADS, None),
+        "wk": (shd.FSDP, shd.KV_HEADS, None),
+        "wv": (shd.FSDP, shd.KV_HEADS, None),
+        "wo": (shd.HEADS, None, shd.FSDP),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dt)
+        p["bk"] = jnp.zeros((hkv, hd), dt)
+        p["bv"] = jnp.zeros((hkv, hd), dt)
+        a["bq"] = (shd.HEADS, None)
+        a["bk"] = (shd.KV_HEADS, None)
+        a["bv"] = (shd.KV_HEADS, None)
+    return p, a
+
+
+def qkv_project(p, x, positions, cfg, *, rope: bool = True):
+    """x (B, S, D) -> q (B, S, H, hd), k/v (B, S, Hkv, hd)."""
+    q = jnp.einsum("bsd,dhq->bshq", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhq->bshq", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhq->bshq", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if rope:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def out_project(p, o):
+    return jnp.einsum("bshq,hqd->bsd", o, p["wo"].astype(o.dtype))
+
+
+def q_chunk_for(seq: int, batch: int, heads: int, *, budget_bytes: int = 1 << 27,
+                min_chunk: int = 128) -> int:
+    """Largest power-of-two q-chunk whose (B, H, qc, S) bf16 score tile fits
+    the byte budget (Lemma-1 instinct: biggest block that fits the fast
+    memory tier)."""
+    qc = seq
+    while qc > min_chunk and batch * heads * qc * seq * 2 > budget_bytes:
+        qc //= 2
+    while seq % qc:
+        qc //= 2
+    return max(qc, 1)
+
+
+def _expand_kv(k, group):
+    if group == 1:
+        return k
+    b, s, hkv, hd = k.shape
+    return jnp.broadcast_to(
+        k[:, :, :, None, :], (b, s, hkv, group, hd)).reshape(b, s, hkv * group, hd)
+
+
+def causal_attention(q, k, v, *, q_chunk: int | None = None):
+    """Causal self-attention, chunked over queries.
+
+    q (B, S, H, hd); k, v (B, S, Hkv, hd). Returns (B, S, H, hd).
+    """
+    b, s, h, hd = q.shape
+    hkv = k.shape[2]
+    group = h // hkv
+    scale = 1.0 / np.sqrt(hd)
+    kf = _expand_kv(k, group)
+    vf = _expand_kv(v, group)
+    if q_chunk is None:
+        q_chunk = q_chunk_for(s, b, h)
+    if q_chunk >= s:
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q * scale, kf).astype(jnp.float32)
+        qpos = jnp.arange(s)[:, None]
+        kpos = jnp.arange(s)[None, :]
+        logits = jnp.where((kpos <= qpos)[None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+
+    nq = s // q_chunk
+    qc = q.reshape(b, nq, q_chunk, h, hd)
+
+    # remat: without it the backward pass stores per-chunk logits/probs/mask
+    # for ALL chunks simultaneously (nq × B × H × qc × S) — the checkpoint
+    # keeps only chunk inputs/outputs and replays the chunk in backward.
+    @jax.checkpoint
+    def body(_, args):
+        qi, idx = args  # (B, qc, H, hd), scalar chunk index
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qi * scale, kf).astype(jnp.float32)
+        qpos = idx * q_chunk + jnp.arange(q_chunk)[:, None]
+        kpos = jnp.arange(s)[None, :]
+        logits = jnp.where((kpos <= qpos)[None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        return None, jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+
+    _, out = jax.lax.scan(body, None, (jnp.moveaxis(qc, 1, 0), jnp.arange(nq)))
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, h, hd)
+
+
+def full_attention(q, k, v, *, k_mask=None):
+    """Bidirectional attention (encoder / cross-attention).
+
+    q (B, Sq, H, hd); k, v (B, Sk, Hkv, hd); k_mask optional (B, Sk) bool.
+    """
+    hd = q.shape[-1]
+    group = q.shape[2] // k.shape[2]
+    kf = _expand_kv(k, group)
+    vf = _expand_kv(v, group)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q / np.sqrt(hd), kf).astype(jnp.float32)
+    if k_mask is not None:
+        logits = jnp.where(k_mask[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+
+
+def decode_attention(q, k_cache, v_cache, length):
+    """One-step decode: q (B, 1, H, hd) over cache (B, S, Hkv, hd); positions
+    >= length are masked (cache may be partially filled).
+
+    Grouped-GQA einsum — the KV cache is NEVER expanded to H heads (an
+    expand materializes + reshards gigabytes per layer at 32k context;
+    measured 37 GiB of per-layer all-gathers on command-r decode). With a
+    sequence-sharded cache this is flash-decoding: scores are computed per
+    seq shard and the softmax stats reduce over the model axis (tiny
+    collectives), never the cache.
+    """
+    b, s, hkv, hd = k_cache.shape
+    h = q.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, 1, hkv, group, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg / np.sqrt(hd),
+                        k_cache).astype(jnp.float32)
+    mask = jnp.arange(s)[None, None, None, None, :] < length
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v_cache)
+    return out.reshape(b, 1, h, hd)
+
+
+def update_cache(k_cache, v_cache, k_new, v_new, pos):
+    """Writes (B, S_new, Hkv, hd) into the cache at offset ``pos``."""
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0))
+    return k_cache, v_cache

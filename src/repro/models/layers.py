@@ -1,0 +1,205 @@
+"""Shared layers: initializers, norms, RoPE, FFN — with logical axes.
+
+Every ``init_*`` returns ``(params, axes)`` — two pytrees of identical
+structure, where ``axes`` leaves are tuples of logical axis names consumed
+by ``repro.dist.sharding``. Compute functions are pure jnp and cast to the
+config compute dtype at use sites.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import sharding as shd
+
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def init_dense(key, in_dim: int, out_dims, in_axis, out_axes, dtype,
+               *, bias: bool = False, scale: float | None = None):
+    """Kernel of shape (in_dim, *out_dims) with fan-in init."""
+    out_dims = tuple(out_dims) if isinstance(out_dims, (tuple, list)) else (out_dims,)
+    out_axes = tuple(out_axes) if isinstance(out_axes, (tuple, list)) else (out_axes,)
+    if scale is None:
+        scale = 1.0 / np.sqrt(in_dim)
+    p = {"kernel": _normal(key, (in_dim, *out_dims), scale, dtype)}
+    a = {"kernel": (in_axis, *out_axes)}
+    if bias:
+        p["bias"] = jnp.zeros(out_dims, dtype)
+        a["bias"] = tuple(out_axes)
+    return p, a
+
+
+def dense(p, x, dims: str):
+    """einsum wrapper, e.g. dims='bsd,dhq->bshq'. Bias added if present."""
+    y = jnp.einsum(dims, x, p["kernel"].astype(x.dtype))
+    if "bias" in p:
+        y = y + p["bias"].astype(x.dtype)
+    return y
+
+
+# --------------------------------------------------------------------------
+# RMSNorm
+# --------------------------------------------------------------------------
+def init_rmsnorm(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": (None,)}
+
+
+def rmsnorm(p, x, eps: float):
+    # variance accumulates in f32 through the dot's preferred_element_type —
+    # never materializing an f32 copy of x. (With x.astype(f32) as the first
+    # op of every layer, XLA hoists the convert of the whole (L,B,S,D) remat
+    # stack out of the backward loop: +10 GiB/device on qwen2-72b.)
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32)[..., None]
+    var = var / x.shape[-1]
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)  # (..., 1), rowwise
+    return x * inv * p["scale"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x (..., S, H, D); positions (..., S) int32."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d, theta))  # (D/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# FFN (SwiGLU / GELU)
+# --------------------------------------------------------------------------
+def init_ffn(key, d: int, d_ff: int, activation: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if activation == "swiglu":
+        p = {
+            "wi": _normal(k1, (d, d_ff), 1 / np.sqrt(d), dtype),
+            "wg": _normal(k2, (d, d_ff), 1 / np.sqrt(d), dtype),
+            "wo": _normal(k3, (d_ff, d), 1 / np.sqrt(d_ff), dtype),
+        }
+        a = {
+            "wi": (shd.FSDP, shd.TENSOR),
+            "wg": (shd.FSDP, shd.TENSOR),
+            "wo": (shd.TENSOR, shd.FSDP),
+        }
+    else:
+        p = {
+            "wi": _normal(k1, (d, d_ff), 1 / np.sqrt(d), dtype),
+            "wo": _normal(k3, (d_ff, d), 1 / np.sqrt(d_ff), dtype),
+        }
+        a = {"wi": (shd.FSDP, shd.TENSOR), "wo": (shd.TENSOR, shd.FSDP)}
+    return p, a
+
+
+_BSF = (shd.BATCH, None, shd.TENSOR)  # ffn hidden
+
+
+def ffn(p, x, activation: str):
+    if activation == "swiglu":
+        h = jax.nn.silu(dense({"kernel": p["wi"]}, x, "bsd,df->bsf"))
+        g = dense({"kernel": p["wg"]}, x, "bsd,df->bsf")
+        return dense({"kernel": p["wo"]}, shd.constrain(h * g, _BSF),
+                     "bsf,fd->bsd")
+    h = jax.nn.gelu(dense({"kernel": p["wi"]}, x, "bsd,df->bsf"))
+    return dense({"kernel": p["wo"]}, shd.constrain(h, _BSF), "bsf,fd->bsd")
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+def init_embed(key, vocab: int, d: int, dtype):
+    # vocab → model axis only: FSDP-sharding the d_model dim forces either a
+    # table all-gather (lookup) or a logits all-reduce over data (unembed);
+    # vocab-only sharding keeps both ends collective-light (measured in
+    # EXPERIMENTS.md §Perf).
+    p = {"table": _normal(key, (vocab, d), 1.0, dtype)}
+    return p, {"table": (shd.VOCAB, None)}
+
+
+def embed(p, tokens, dtype, *, iota: bool = False):
+    if iota:
+        # one-hot matmul: GSPMD shards (tokens × vocab) ⊗ (vocab × d) with
+        # no replication; the gather path "last-resort" replicates (B,S,D)
+        # when batch is sharded wider than the table (measured 17 GiB/device
+        # on qwen2 fsdp — §Perf A4)
+        vocab = p["table"].shape[0]
+        oh = jax.nn.one_hot(tokens, vocab, dtype=dtype)
+        return jnp.einsum("bsv,vd->bsd", oh, p["table"].astype(dtype))
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(p, x):
+    return jnp.einsum("bsd,vd->bsv", x, p["table"].astype(x.dtype))
+
+
+# --------------------------------------------------------------------------
+# Stacked-layer init (for lax.scan over layers)
+# --------------------------------------------------------------------------
+def init_stacked(key, num_layers: int, init_one):
+    """Vmaps ``init_one(key) -> (params, axes)`` over a leading layer axis,
+    prefixing every axes tuple with "layers" (never sharded)."""
+    keys = jax.random.split(key, num_layers)
+    p0, a0 = init_one(keys[0])
+    stacked = jax.vmap(lambda k: init_one(k)[0])(keys)
+    axes = jax.tree.map(
+        lambda ax: ("layers", *ax),
+        a0,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    return stacked, axes
+
+
+@jax.custom_vjp
+def bf16_cotangent(x):
+    """Identity whose COTANGENT is rounded through bf16.
+
+    Placed at layer boundaries it makes the whole backward chain (and thus
+    the per-layer gradient all-reduces, the dominant wire volume in TP
+    training) travel in bf16 instead of f32 — a 2× collective reduction
+    with bf16-roundoff-level gradient error (§Perf A1/B1).
+    """
+    return x
+
+
+def _bf16_cot_fwd(x):
+    return x, None
+
+
+def _bf16_cot_bwd(_, g):
+    return (g.astype(jnp.bfloat16).astype(g.dtype),)
+
+
+bf16_cotangent.defvjp(_bf16_cot_fwd, _bf16_cot_bwd)
+
+
+def maybe_bf16_cotangent(x, enabled: bool):
+    return bf16_cotangent(x) if enabled else x
+
+
+def cross_entropy(logits, labels, *, z_loss: float = 1e-4):
+    """Mean CE over tokens with optional z-loss; logits may be vocab-sharded
+    (GSPMD inserts the model-axis reductions for max/logsumexp)."""
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    shifted = lf - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    loss = jnp.mean(nll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(lse * lse)
+    return loss

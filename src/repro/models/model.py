@@ -1,0 +1,79 @@
+"""Unified model API over all families.
+
+    model = Model(cfg)
+    params, axes = model.init(rng)
+    loss = model.train_loss(params, batch)          # batch: dict of arrays
+    logits, cache = model.prefill(params, batch)
+    logits, cache = model.decode_step(params, cache, token, pos)
+    cache, cache_axes = model.init_cache(batch_size, cache_len)
+
+``batch`` keys: tokens, labels (+ frames for encdec, patch_embeds for vlm).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.models import encdec, transformer
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- init ----------------------------------------------------------------
+    def init(self, key) -> tuple[dict, dict]:
+        if self.cfg.family == "encdec":
+            return encdec.init_params(key, self.cfg)
+        return transformer.init_params(key, self.cfg)
+
+    def init_abstract(self) -> tuple[dict, dict]:
+        """(ShapeDtypeStruct params, axes) without allocation — dry-run use.
+
+        The logical-axes tree is static Python data built during init; we
+        capture it through a side channel while tracing, so no parameter
+        memory is ever allocated (72B-param models stay abstract).
+        """
+        box = {}
+
+        def params_only(key):
+            p, a = self.init(key)
+            box["axes"] = a
+            return p
+
+        shapes = jax.eval_shape(params_only, jax.random.PRNGKey(0))
+        return shapes, box["axes"]
+
+    # -- train ----------------------------------------------------------------
+    def train_loss(self, params, batch):
+        if self.cfg.family == "encdec":
+            return encdec.train_loss(params, batch, self.cfg)
+        return transformer.train_loss(params, batch, self.cfg)
+
+    def forward(self, params, batch):
+        if self.cfg.family == "encdec":
+            return encdec.forward(params, batch["tokens"], batch["frames"],
+                                  self.cfg)
+        return transformer.forward(params, batch["tokens"], self.cfg,
+                                   patch_embeds=batch.get("patch_embeds"))
+
+    # -- serve ----------------------------------------------------------------
+    def prefill(self, params, batch, *, cache_len: int | None = None):
+        if self.cfg.family == "encdec":
+            return encdec.prefill(params, batch["tokens"], batch["frames"],
+                                  self.cfg, cache_len=cache_len)
+        return transformer.prefill(params, batch["tokens"], self.cfg,
+                                   cache_len=cache_len,
+                                   patch_embeds=batch.get("patch_embeds"))
+
+    def decode_step(self, params, cache, token, pos):
+        if self.cfg.family == "encdec":
+            return encdec.decode_step(params, cache, token, pos, self.cfg)
+        return transformer.decode_step(params, cache, token, pos, self.cfg)
+
+    def init_cache(self, batch: int, cache_len: int):
+        if self.cfg.family == "encdec":
+            return encdec.init_cache(self.cfg, batch, cache_len)
+        return transformer.init_cache(self.cfg, batch, cache_len)

@@ -1,0 +1,181 @@
+"""Mamba2 (SSD) block: chunked-parallel training path + O(1)-state decode.
+
+Training uses the chunked state-space-duality form (ref.ssd_scan_chunked_ref
+/ the Pallas kernel in kernels/ssd_scan.py): a quadratic within-chunk dual
+(MXU-friendly) plus a cross-chunk state recurrence — structurally the
+paper's block pipeline: per-block compute (daemon) + tiny global carry
+(agent combine).
+
+Decode carries two states per layer: the SSM state (B, H, N, P) and the
+causal-conv tail (B, d_conv-1, conv_channels).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import sharding as shd
+from repro.kernels import ref as kref
+from repro.models import layers as L
+
+
+def conv_channels(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_ssm_block(key, cfg) -> tuple[dict, dict]:
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    g = cfg.ssm_groups
+    nh = cfg.ssm_heads
+    cch = conv_channels(cfg)
+    dt = cfg.jparam_dtype
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * g * n + nh  # [z, x, B, C, dt]
+    p = {
+        "in_proj": L._normal(k1, (d, proj_out), 1 / np.sqrt(d), dt),
+        "conv_w": L._normal(k2, (cfg.ssm_conv, cch), 1 / np.sqrt(cfg.ssm_conv), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dt),
+        "dt_bias": jnp.zeros((nh,), dt),
+        "d_skip": jnp.ones((nh,), dt),
+        "norm_scale": jnp.ones((di,), dt),
+        "out_proj": L._normal(k4, (di, d), 1 / np.sqrt(di), dt),
+    }
+    a = {
+        "in_proj": (shd.FSDP, shd.TENSOR),
+        "conv_w": (None, shd.TENSOR),
+        "a_log": (None,),
+        "dt_bias": (None,),
+        "d_skip": (None,),
+        "norm_scale": (shd.TENSOR,),
+        "out_proj": (shd.TENSOR, shd.FSDP),
+    }
+    return p, a
+
+
+def _split_proj(cfg, zxbcdt):
+    di, n, g, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads
+    z, x, b, c, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1)
+    return z, x, b, c, dt
+
+
+def _causal_conv(xbc, conv_w):
+    """Depthwise causal conv: xbc (B, S, C), conv_w (K, C)."""
+    k = conv_w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1], :] * conv_w[i][None, None, :]
+              for i in range(k))
+    return jax.nn.silu(out)
+
+
+def _gated_norm(x, z, scale, eps):
+    xf = (x * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssm_forward(p, hidden, cfg):
+    """Training/prefill SSD pass. hidden (B, S, D) -> (B, S, D)."""
+    bsz, s, _ = hidden.shape
+    di, n, g, nh, hd = (cfg.d_inner, cfg.ssm_state, cfg.ssm_groups,
+                        cfg.ssm_heads, cfg.ssm_head_dim)
+    zxbcdt = L.dense({"kernel": p["in_proj"]}, hidden, "bsd,de->bse")
+    zxbcdt = shd.constrain(zxbcdt, (shd.BATCH, None, shd.TENSOR))
+    z, x, b, c, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([x, b, c], axis=-1)
+    xbc = _causal_conv(xbc, p["conv_w"].astype(hidden.dtype))
+    x, b, c = jnp.split(xbc, [di, di + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B, S, H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,)
+    xh = x.reshape(bsz, s, nh, hd)
+    bm = b.reshape(bsz, s, g, n)
+    cm = c.reshape(bsz, s, g, n)
+    chunk = min(cfg.ssm_chunk, s)
+    while s % chunk:
+        chunk //= 2
+    y = kref.ssd_scan_chunked_ref(xh, dt, a, bm, cm, chunk=chunk)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(bsz, s, di).astype(hidden.dtype)
+    y = _gated_norm(y, z, p["norm_scale"], cfg.norm_eps)
+    return L.dense({"kernel": p["out_proj"]}, y, "bse,ed->bsd")
+
+
+def ssm_prefill(p, hidden, cfg):
+    """Like ``ssm_forward`` but also returns the decode cache (final SSM
+    state + conv tail) for the prefill → decode handoff."""
+    bsz, s, _ = hidden.shape
+    di, n, g, nh, hd = (cfg.d_inner, cfg.ssm_state, cfg.ssm_groups,
+                        cfg.ssm_heads, cfg.ssm_head_dim)
+    zxbcdt = L.dense({"kernel": p["in_proj"]}, hidden, "bsd,de->bse")
+    z, x, b, c, dt = _split_proj(cfg, zxbcdt)
+    xbc_raw = jnp.concatenate([x, b, c], axis=-1)
+    tail = xbc_raw[:, s - (cfg.ssm_conv - 1):, :]
+    xbc = _causal_conv(xbc_raw, p["conv_w"].astype(hidden.dtype))
+    x, b, c = jnp.split(xbc, [di, di + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = x.reshape(bsz, s, nh, hd)
+    bm = b.reshape(bsz, s, g, n)
+    cm = c.reshape(bsz, s, g, n)
+    chunk = min(cfg.ssm_chunk, s)
+    while s % chunk:
+        chunk //= 2
+    y, state = kref.ssd_scan_chunked_ref(xh, dt, a, bm, cm, chunk=chunk,
+                                         return_final_state=True)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(bsz, s, di).astype(hidden.dtype)
+    y = _gated_norm(y, z, p["norm_scale"], cfg.norm_eps)
+    out = L.dense({"kernel": p["out_proj"]}, y, "bse,ed->bsd")
+    return out, {"ssm": state, "conv": tail.astype(hidden.dtype)}
+
+
+def init_ssm_cache(cfg, batch: int, dtype) -> dict:
+    """Per-layer decode state (caller stacks over layers)."""
+    return {
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                         jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_channels(cfg)), dtype),
+    }
+
+
+def ssm_cache_axes(cfg) -> dict:
+    return {"ssm": (shd.BATCH, shd.HEADS, None, None),
+            "conv": (shd.BATCH, None, shd.TENSOR)}
+
+
+def ssm_decode_step(p, hidden, cache, cfg):
+    """One-token decode. hidden (B, 1, D); cache from init_ssm_cache."""
+    bsz = hidden.shape[0]
+    di, n, g, nh, hd = (cfg.d_inner, cfg.ssm_state, cfg.ssm_groups,
+                        cfg.ssm_heads, cfg.ssm_head_dim)
+    zxbcdt = L.dense({"kernel": p["in_proj"]}, hidden, "bsd,de->bse")[:, 0]
+    z, x, b, c, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([x, b, c], axis=-1)  # (B, C)
+    window = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)
+    conv_w = p["conv_w"].astype(hidden.dtype)
+    out = jnp.einsum("bkc,kc->bc", window, conv_w)
+    xbc = jax.nn.silu(out)
+    new_conv = window[:, 1:, :]
+    x, b, c = jnp.split(xbc, [di, di + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(a[None] * dt)  # (B, H)
+    xh = x.reshape(bsz, nh, hd).astype(jnp.float32)
+    rep = nh // g
+    bm = jnp.repeat(b.reshape(bsz, g, n), rep, axis=1).astype(jnp.float32)
+    cm = jnp.repeat(c.reshape(bsz, g, n), rep, axis=1).astype(jnp.float32)
+    state = cache["ssm"] * decay[..., None, None] + (
+        (dt[..., None] * bm)[..., :, None] * xh[..., None, :])  # (B,H,N,P)
+    y = jnp.einsum("bhn,bhnp->bhp", cm, state)
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(bsz, 1, di).astype(hidden.dtype)
+    y = _gated_norm(y, z[:, None, :], p["norm_scale"], cfg.norm_eps)
+    out = L.dense({"kernel": p["out_proj"]}, y, "bse,ed->bsd")
+    return out, {"ssm": state, "conv": new_conv}

@@ -1,0 +1,429 @@
+"""Decoder-only stacks: dense / MoE / SSM (Mamba2) / hybrid (Zamba2) / VLM.
+
+Layers are stacked on a leading axis and driven by ``lax.scan`` (compile
+time stays flat in depth — 94-layer MoE compiles as one body) with
+``jax.checkpoint`` rematerialization per layer. The hybrid family scans
+*groups*: G outer steps, each an inner scan over ``attn_every`` Mamba2
+layers followed by the shared attention block (one weight set, fresh KV
+cache per invocation — Zamba2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import sharding as shd
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.common import ModelConfig
+
+LEAF = lambda x: isinstance(x, tuple) and all(  # noqa: E731
+    isinstance(e, (str, type(None))) for e in x)
+
+
+# --------------------------------------------------------------------------
+# per-layer init
+# --------------------------------------------------------------------------
+def init_dense_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    attn_p, attn_a = A.init_attention(k1, cfg)
+    ffn_p, ffn_a = L.init_ffn(k2, cfg.d_model, cfg.d_ff, cfg.activation,
+                              cfg.jparam_dtype)
+    ln1_p, ln1_a = L.init_rmsnorm(cfg.d_model, cfg.jparam_dtype)
+    ln2_p, ln2_a = L.init_rmsnorm(cfg.d_model, cfg.jparam_dtype)
+    return ({"ln1": ln1_p, "attn": attn_p, "ln2": ln2_p, "ffn": ffn_p},
+            {"ln1": ln1_a, "attn": attn_a, "ln2": ln2_a, "ffn": ffn_a})
+
+
+def init_moe_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    attn_p, attn_a = A.init_attention(k1, cfg)
+    moe_p, moe_a = M.init_moe(k2, cfg)
+    ln1_p, ln1_a = L.init_rmsnorm(cfg.d_model, cfg.jparam_dtype)
+    ln2_p, ln2_a = L.init_rmsnorm(cfg.d_model, cfg.jparam_dtype)
+    return ({"ln1": ln1_p, "attn": attn_p, "ln2": ln2_p, "moe": moe_p},
+            {"ln1": ln1_a, "attn": attn_a, "ln2": ln2_a, "moe": moe_a})
+
+
+def init_ssm_layer(key, cfg: ModelConfig):
+    ln_p, ln_a = L.init_rmsnorm(cfg.d_model, cfg.jparam_dtype)
+    ssm_p, ssm_a = S.init_ssm_block(key, cfg)
+    return {"ln1": ln_p, "ssm": ssm_p}, {"ln1": ln_a, "ssm": ssm_a}
+
+
+LAYER_INITS = {"dense": init_dense_layer, "moe": init_moe_layer,
+               "ssm": init_ssm_layer}
+
+
+def layer_kind(cfg: ModelConfig) -> str:
+    return {"dense": "dense", "vlm": "dense", "moe": "moe",
+            "ssm": "ssm", "hybrid": "ssm"}[cfg.family]
+
+
+def init_params(key, cfg: ModelConfig) -> tuple[dict, dict]:
+    ke, kl, ks, ku = jax.random.split(key, 4)
+    emb_p, emb_a = L.init_embed(ke, cfg.padded_vocab, cfg.d_model,
+                                cfg.jparam_dtype)
+    layers_p, layers_a = L.init_stacked(
+        kl, cfg.num_layers, functools.partial(LAYER_INITS[layer_kind(cfg)],
+                                              cfg=cfg))
+    fn_p, fn_a = L.init_rmsnorm(cfg.d_model, cfg.jparam_dtype)
+    params = {"embed": emb_p, "layers": layers_p, "final_norm": fn_p}
+    axes = {"embed": emb_a, "layers": layers_a, "final_norm": fn_a}
+    if not cfg.tie_embeddings:
+        un_p, un_a = L.init_embed(ku, cfg.padded_vocab, cfg.d_model,
+                                  cfg.jparam_dtype)
+        params["unembed"] = un_p
+        axes["unembed"] = un_a
+    if cfg.family == "hybrid":
+        sp, sa = init_dense_layer(ks, cfg)
+        params["shared_attn"] = sp
+        axes["shared_attn"] = sa
+    if cfg.family == "vlm":
+        pp, pa = L.init_dense(ks, cfg.d_model, cfg.d_model,
+                              shd.FSDP, shd.TENSOR, cfg.jparam_dtype)
+        params["patch_proj"] = pp
+        axes["patch_proj"] = pa
+    return params, axes
+
+
+# --------------------------------------------------------------------------
+# layer forward (training / prefill path)
+# --------------------------------------------------------------------------
+_BSD = (shd.BATCH, None, None)          # (batch, seq, d_model)
+_BSHD = (shd.BATCH, None, shd.HEADS, None)  # (batch, seq, heads, head_dim)
+
+
+def dense_layer_fwd(p, h, positions, cfg: ModelConfig, *, causal=True,
+                    q_chunk=None):
+    h = shd.constrain(h, _BSD)
+    x = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+    q, k, v = A.qkv_project(p["attn"], x, positions, cfg)
+    q = shd.constrain(q, _BSHD)
+    k = shd.constrain(k, (shd.BATCH, None, shd.KV_HEADS, None))
+    v = shd.constrain(v, (shd.BATCH, None, shd.KV_HEADS, None))
+    if causal:
+        o = A.causal_attention(q, k, v, q_chunk=q_chunk)
+    else:
+        o = A.full_attention(q, k, v)
+    o = shd.constrain(o, _BSHD)
+    h = h + A.out_project(p["attn"], o)
+    h = shd.constrain(h, _BSD)
+    x = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+    if "ffn" in p:
+        h = h + L.ffn(p["ffn"], x, cfg.activation)
+        h = L.maybe_bf16_cotangent(h, cfg.bf16_cotangent)
+        return shd.constrain(h, _BSD), (k, v), jnp.zeros((), jnp.float32)
+    y, aux = M.moe_ffn(p["moe"], x, cfg, return_aux=True)
+    h = L.maybe_bf16_cotangent(h + y, cfg.bf16_cotangent)
+    return shd.constrain(h, _BSD), (k, v), aux
+
+
+def ssm_layer_fwd(p, h, cfg: ModelConfig):
+    h = shd.constrain(h, _BSD)
+    x = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+    h = L.maybe_bf16_cotangent(h + S.ssm_forward(p["ssm"], x, cfg),
+                               cfg.bf16_cotangent)
+    return shd.constrain(h, _BSD)
+
+
+# --------------------------------------------------------------------------
+# stack forward (train): returns final hidden + aux loss
+# --------------------------------------------------------------------------
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat:
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return fn
+
+
+def stack_forward(params, h, positions, cfg: ModelConfig):
+    kind = layer_kind(cfg)
+
+    if cfg.family == "hybrid":
+        return _hybrid_forward(params, h, positions, cfg)
+
+    if kind in ("dense", "moe"):
+        def body(carry, lp):
+            hh, aux = carry
+            hh, _, a = dense_layer_fwd(lp, hh, positions, cfg)
+            return (hh, aux + a), None
+    else:
+        def body(carry, lp):
+            hh, aux = carry
+            return (ssm_layer_fwd(lp, hh, cfg), aux), None
+
+    (h, aux), _ = jax.lax.scan(_maybe_remat(body, cfg), (h, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    return h, aux
+
+
+def _hybrid_forward(params, h, positions, cfg: ModelConfig):
+    per = cfg.attn_every
+    groups = cfg.num_layers // per
+    grouped = jax.tree.map(
+        lambda x: x.reshape(groups, per, *x.shape[1:]), params["layers"])
+    shared = params["shared_attn"]
+
+    def group_body(carry, gp):
+        hh, aux = carry
+
+        def inner(c, lp):
+            return ssm_layer_fwd(lp, c, cfg), None
+
+        hh, _ = jax.lax.scan(inner, hh, gp)
+        hh, _, a = dense_layer_fwd(shared, hh, positions, cfg)
+        return (hh, aux + a), None
+
+    (h, aux), _ = jax.lax.scan(_maybe_remat(group_body, cfg),
+                               (h, jnp.zeros((), jnp.float32)), grouped)
+    return h, aux
+
+
+# --------------------------------------------------------------------------
+# embedding in / out
+# --------------------------------------------------------------------------
+def embed_tokens(params, tokens, cfg: ModelConfig, *, patch_embeds=None):
+    h = L.embed(params["embed"], tokens, cfg.jdtype, iota=cfg.iota_embed)
+    h = h * jnp.asarray(cfg.d_model ** 0.5, cfg.jdtype)
+    if cfg.family == "vlm" and patch_embeds is not None:
+        pe = L.dense(params["patch_proj"], patch_embeds.astype(cfg.jdtype),
+                     "bpd,de->bpe")
+        npatch = pe.shape[1]
+        h = h.at[:, :npatch, :].add(pe)
+    # the layer-stack constraint (BATCH may span the whole mesh under fsdp)
+    # happens at the first layer boundary; here batch stays on data axes so
+    # the table's vocab sharding has the model axis available
+    return shd.constrain(h, (shd.BATCH_DP, None, None))
+
+
+def lm_logits(params, h, cfg: ModelConfig):
+    h = L.maybe_bf16_cotangent(h, cfg.bf16_cotangent)
+    h = shd.constrain(h, (shd.BATCH_DP, None, None))
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = shd.constrain(L.unembed(table, h),
+                           (shd.BATCH_DP, None, shd.VOCAB))
+    if cfg.padded_vocab != cfg.vocab_size:
+        # padding columns carry no probability mass (CE/softmax correctness)
+        col = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(col < cfg.vocab_size, logits,
+                           jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+def forward(params, tokens, cfg: ModelConfig, *, patch_embeds=None):
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h = embed_tokens(params, tokens, cfg, patch_embeds=patch_embeds)
+    h, aux = stack_forward(params, h, positions, cfg)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return lm_logits(params, h, cfg), aux
+
+
+def train_loss(params, batch, cfg: ModelConfig, *, aux_weight: float = 0.01):
+    logits, aux = forward(params, batch["tokens"], cfg,
+                          patch_embeds=batch.get("patch_embeds"))
+    loss = L.cross_entropy(logits, batch["labels"])
+    return loss + aux_weight * aux
+
+
+# --------------------------------------------------------------------------
+# prefill / decode (serving)
+# --------------------------------------------------------------------------
+DEFAULT_MODEL_SHARDS = 16  # production mesh model-axis width
+
+
+def kv_cache_axes(cfg: ModelConfig, *, model_shards: int = DEFAULT_MODEL_SHARDS):
+    """KV-cache layout policy: shard KV heads on the model axis when they
+    divide it; otherwise shard the cache SEQUENCE dim (flash-decoding —
+    scores computed per seq shard, softmax stats psum over model). Never
+    fall back to head_dim: that puts the score contraction dim on the model
+    axis and all-reduces (B,H,1,S) scores per layer."""
+    if cfg.num_kv_heads % model_shards == 0:
+        return ("layers", shd.BATCH, None, shd.KV_HEADS, None)
+    return ("layers", shd.BATCH, shd.KV_SEQ, None, None)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    """Decode cache skeleton + logical axes (used by input_specs too)."""
+    hd, hkv = cfg.resolved_head_dim, cfg.num_kv_heads
+    dt = cfg.jdtype
+    kv_axes = kv_cache_axes(cfg)
+    kind = layer_kind(cfg)
+    cache: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    if kind in ("dense", "moe"):
+        shape = (cfg.num_layers, batch, cache_len, hkv, hd)
+        cache = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+        axes = {"k": kv_axes, "v": kv_axes}
+    elif cfg.family == "ssm":
+        one = S.init_ssm_cache(cfg, batch, dt)
+        cache = jax.tree.map(
+            lambda x: jnp.zeros((cfg.num_layers, *x.shape), x.dtype), one)
+        one_axes = S.ssm_cache_axes(cfg)
+        axes = jax.tree.map(lambda ax: ("layers", *ax), one_axes, is_leaf=LEAF)
+    elif cfg.family == "hybrid":
+        groups = cfg.num_layers // cfg.attn_every
+        one = S.init_ssm_cache(cfg, batch, dt)
+        cache = jax.tree.map(
+            lambda x: jnp.zeros((cfg.num_layers, *x.shape), x.dtype), one)
+        one_axes = S.ssm_cache_axes(cfg)
+        axes = jax.tree.map(lambda ax: ("layers", *ax), one_axes, is_leaf=LEAF)
+        shape = (groups, batch, cache_len, hkv, hd)
+        cache["k"] = jnp.zeros(shape, dt)
+        cache["v"] = jnp.zeros(shape, dt)
+        axes["k"] = kv_axes
+        axes["v"] = kv_axes
+    return cache, axes
+
+
+def constrain_kv(cfg: ModelConfig, k_cache, v_cache):
+    """Per-layer cache constraint (cache axes minus the layers dim)."""
+    ax = kv_cache_axes(cfg)[1:]
+    return shd.constrain(k_cache, ax), shd.constrain(v_cache, ax)
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, cache_len: int | None = None,
+            patch_embeds=None):
+    """Processes the prompt; returns (last-position logits, cache)."""
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h = embed_tokens(params, tokens, cfg, patch_embeds=patch_embeds)
+    kind = layer_kind(cfg)
+
+    def pad_kv(k):
+        return jax.lax.dynamic_update_slice(
+            jnp.zeros((b, cache_len, *k.shape[2:]), k.dtype), k, (0, 0, 0, 0))
+
+    if cfg.family == "hybrid":
+        h, cache = _hybrid_prefill(params, h, positions, cfg, pad_kv)
+    elif kind in ("dense", "moe"):
+        def body(hh, lp):
+            hh, (k, v), _ = dense_layer_fwd(lp, hh, positions, cfg)
+            return hh, (pad_kv(k), pad_kv(v))
+
+        h, (ks, vs) = jax.lax.scan(_maybe_remat(body, cfg), h, params["layers"])
+        cache = {"k": ks, "v": vs}
+    else:  # ssm
+        def body(hh, lp):
+            x = L.rmsnorm(lp["ln1"], hh, cfg.norm_eps)
+            y, c = S.ssm_prefill(lp["ssm"], x, cfg)
+            return hh + y, c
+
+        h, cache = jax.lax.scan(_maybe_remat(body, cfg), h, params["layers"])
+
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = lm_logits(params, h[:, -1:, :], cfg)
+    return logits, cache
+
+
+def _hybrid_prefill(params, h, positions, cfg, pad_kv):
+    per = cfg.attn_every
+    groups = cfg.num_layers // per
+    grouped = jax.tree.map(
+        lambda x: x.reshape(groups, per, *x.shape[1:]), params["layers"])
+    shared = params["shared_attn"]
+
+    def group_body(hh, gp):
+        def inner(c, lp):
+            x = L.rmsnorm(lp["ln1"], c, cfg.norm_eps)
+            y, sc = S.ssm_prefill(lp["ssm"], x, cfg)
+            return c + y, sc
+
+        hh, ssm_c = jax.lax.scan(inner, hh, gp)
+        hh, (k, v), _ = dense_layer_fwd(shared, hh, positions, cfg)
+        return hh, (ssm_c, pad_kv(k), pad_kv(v))
+
+    h, (ssm_c, ks, vs) = jax.lax.scan(_maybe_remat(group_body, cfg), h, grouped)
+    cache = jax.tree.map(lambda x: x.reshape(cfg.num_layers, *x.shape[2:]), ssm_c)
+    cache["k"] = ks
+    cache["v"] = vs
+    return h, cache
+
+
+def _attn_decode(p, h, cache_kv, pos, cfg):
+    """One-token attention with cache update. h (B, 1, D)."""
+    k_cache, v_cache = cache_kv
+    x = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+    b = h.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = A.qkv_project(p["attn"], x, positions, cfg)
+    k_cache, v_cache = A.update_cache(k_cache, v_cache, k, v, pos)
+    k_cache, v_cache = constrain_kv(cfg, k_cache, v_cache)
+    o = A.decode_attention(q, k_cache, v_cache, pos + 1)
+    h = h + A.out_project(p["attn"], o)
+    x = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+    if "ffn" in p:
+        h = h + L.ffn(p["ffn"], x, cfg.activation)
+    else:
+        h = h + M.moe_ffn(p["moe"], x, cfg)
+    return h, (k_cache, v_cache)
+
+
+def decode_step(params, cache, token, pos, cfg: ModelConfig):
+    """token (B, 1) int32; pos scalar int32 — position being generated.
+    Returns (logits (B, 1, V), new cache)."""
+    h = embed_tokens(params, token, cfg)
+    kind = layer_kind(cfg)
+
+    if cfg.family == "hybrid":
+        h, cache = _hybrid_decode(params, h, cache, pos, cfg)
+    elif kind in ("dense", "moe"):
+        def body(hh, xs):
+            lp, kc, vc = xs
+            hh, (kc, vc) = _attn_decode(lp, hh, (kc, vc), pos, cfg)
+            return hh, (kc, vc)
+
+        h, (ks, vs) = jax.lax.scan(body, h,
+                                   (params["layers"], cache["k"], cache["v"]))
+        cache = {"k": ks, "v": vs}
+    else:  # ssm
+        def body(hh, xs):
+            lp, c = xs
+            x = L.rmsnorm(lp["ln1"], hh, cfg.norm_eps)
+            y, c = S.ssm_decode_step(lp["ssm"], x, c, cfg)
+            return hh + y, c
+
+        h, new_c = jax.lax.scan(
+            body, h, (params["layers"], {"ssm": cache["ssm"],
+                                         "conv": cache["conv"]}))
+        cache = new_c
+
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return lm_logits(params, h, cfg), cache
+
+
+def _hybrid_decode(params, h, cache, pos, cfg):
+    per = cfg.attn_every
+    groups = cfg.num_layers // per
+    grouped = jax.tree.map(
+        lambda x: x.reshape(groups, per, *x.shape[1:]), params["layers"])
+    ssm_c = {"ssm": cache["ssm"].reshape(groups, per, *cache["ssm"].shape[1:]),
+             "conv": cache["conv"].reshape(groups, per, *cache["conv"].shape[1:])}
+    shared = params["shared_attn"]
+
+    def group_body(hh, xs):
+        gp, sc, kc, vc = xs
+
+        def inner(c, layer_xs):
+            lp, lc = layer_xs
+            x = L.rmsnorm(lp["ln1"], c, cfg.norm_eps)
+            y, lc = S.ssm_decode_step(lp["ssm"], x, lc, cfg)
+            return c + y, lc
+
+        hh, sc = jax.lax.scan(inner, hh, (gp, sc))
+        hh, (kc, vc) = _attn_decode(shared, hh, (kc, vc), pos, cfg)
+        return hh, (sc, kc, vc)
+
+    h, (ssm_c, ks, vs) = jax.lax.scan(group_body, h,
+                                      (grouped, ssm_c, cache["k"], cache["v"]))
+    new_cache = jax.tree.map(
+        lambda x: x.reshape(cfg.num_layers, *x.shape[2:]), ssm_c)
+    new_cache["k"] = ks
+    new_cache["v"] = vs
+    return h, new_cache

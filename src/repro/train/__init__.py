@@ -1,0 +1,1 @@
+"""Training/serving substrate: optimizer, step factories, data, checkpoint."""

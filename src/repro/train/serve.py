@@ -1,0 +1,52 @@
+"""Serving steps: prefill and single-token decode (greedy / temperature).
+
+``serve_step`` (decode) is what the ``decode_*`` / ``long_*`` dry-run cells
+lower: one new token against a KV cache of ``seq_len``. Batched requests
+are padded to the fixed batch; per-request lengths mask attention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+
+def make_prefill_step(model: Model, *, cache_len: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cache_len=cache_len)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, *, greedy: bool = True,
+                     temperature: float = 1.0):
+    def decode_step(params, cache, token, pos, rng=None):
+        logits, cache = model.decode_step(params, cache, token, pos)
+        logits = logits[:, -1, :]
+        if greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+        return nxt[:, None], cache, logits
+
+    return decode_step
+
+
+def generate(model: Model, params, prompt_tokens, *, steps: int,
+             cache_len: int | None = None, batch_extra=None):
+    """Host-loop generation for examples/tests (jit per step)."""
+    b, s = prompt_tokens.shape
+    cache_len = cache_len or (s + steps)
+    batch = {"tokens": prompt_tokens}
+    if batch_extra:
+        batch.update(batch_extra)
+    prefill = jax.jit(make_prefill_step(model, cache_len=cache_len))
+    decode = jax.jit(make_decode_step(model))
+    logits, cache = prefill(params, batch)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    for i in range(steps - 1):
+        tok, cache, _ = decode(params, cache, tok, s + i)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,54 @@
+"""Lemmas 2 & 3 (workload balancing) — property tests vs brute force."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import balance
+
+costs = st.lists(st.floats(min_value=1e-3, max_value=100.0), min_size=2,
+                 max_size=12)
+
+
+@settings(max_examples=200, deadline=None)
+@given(c=costs, total=st.floats(min_value=1.0, max_value=1e6))
+def test_lemma2_beats_random_partitions(c, total):
+    c = np.asarray(c)
+    d_star = balance.lemma2_loads(c, total)
+    g_star = balance.makespan(c, d_star)
+    assert g_star == pytest.approx(balance.lemma2_optimum(c, total), rel=1e-6)
+    rng = np.random.default_rng(42)
+    for _ in range(20):
+        frac = rng.dirichlet(np.ones(len(c)))
+        g = balance.makespan(c, frac * total)
+        assert g >= g_star * (1 - 1e-9)
+
+
+@settings(max_examples=200, deadline=None)
+@given(d=st.lists(st.floats(min_value=1.0, max_value=1e5), min_size=2,
+                  max_size=12),
+       f=st.floats(min_value=1e-2, max_value=1e3))
+def test_lemma3_achieves_bound(d, f):
+    d = np.asarray(d)
+    inv_c = balance.lemma3_capacities(d, f)
+    assert np.all(inv_c <= f * (1 + 1e-12))  # feasibility
+    g = balance.makespan(1.0 / inv_c, d)
+    assert g == pytest.approx(balance.lemma3_optimum(d, f), rel=1e-6)
+    # no feasible capacity assignment does better than d_max / f
+    assert g <= balance.makespan(np.full(len(d), 1.0 / f), d) + 1e-9
+
+
+def test_capacity_estimator_rebalances_straggler():
+    est = balance.CapacityEstimator(num_nodes=4)
+    for it in range(10):
+        for node in range(4):
+            t = 2.0 if node == 3 else 1.0  # node 3 is 2× slower
+            est.update(node, entities=1000, seconds=t)
+    frac = est.rebalance_fractions()
+    assert frac[3] == pytest.approx(frac[0] / 2, rel=0.05)
+    assert frac.sum() == pytest.approx(1.0)
+
+
+def test_accelerators_needed():
+    d = np.array([1000.0, 4000.0])
+    need = balance.accelerators_needed(d, unit_capacity=1000.0, deadline=1.0)
+    assert list(need) == [1, 4]

@@ -1,0 +1,95 @@
+"""Layer-level numerics: rmsnorm, RoPE, embeddings, CE, cotangent barrier."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+
+def test_rmsnorm_matches_f32_reference():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 64), jnp.float32)
+    p = {"scale": 1.0 + 0.1 * jax.random.normal(jax.random.PRNGKey(1), (64,))}
+    y = L.rmsnorm(p, x, 1e-5)
+    xf = np.asarray(x, np.float64)
+    ref = xf / np.sqrt((xf ** 2).mean(-1, keepdims=True) + 1e-5) * np.asarray(
+        p["scale"], np.float64)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-5)
+    # bf16 path stays finite and close
+    yb = L.rmsnorm({"scale": p["scale"].astype(jnp.bfloat16)},
+                   x.astype(jnp.bfloat16), 1e-5)
+    np.testing.assert_allclose(np.asarray(yb, np.float32), ref, atol=0.1)
+
+
+def test_rope_preserves_norm_and_is_identity_at_zero():
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 6, 4, 32))
+    pos = jnp.broadcast_to(jnp.arange(6), (2, 6))
+    y = L.apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    y0 = L.apply_rope(x, jnp.zeros((2, 6), jnp.int32), 10_000.0)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(x), atol=1e-6)
+
+
+def test_rope_relative_property():
+    """<rope(q,m), rope(k,n)> depends only on m-n (the RoPE contract)."""
+    q = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 1, 64))
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 1, 1, 64))
+
+    def score(m, n):
+        qm = L.apply_rope(q, jnp.full((1, 1), m), 10_000.0)
+        kn = L.apply_rope(k, jnp.full((1, 1), n), 10_000.0)
+        return float(jnp.sum(qm * kn))
+
+    assert score(5, 3) == np.testing.assert_allclose(
+        score(5, 3), score(12, 10), rtol=1e-4) or True
+    np.testing.assert_allclose(score(7, 0), score(107, 100), rtol=1e-3)
+
+
+def test_iota_embed_equals_gather():
+    p = {"table": jax.random.normal(jax.random.PRNGKey(5), (64, 16))}
+    tokens = jax.random.randint(jax.random.PRNGKey(6), (2, 8), 0, 64)
+    a = L.embed(p, tokens, jnp.float32, iota=False)
+    b = L.embed(p, tokens, jnp.float32, iota=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_bf16_cotangent_barrier():
+    x = jax.random.normal(jax.random.PRNGKey(7), (32,), jnp.float32)
+
+    def f(x, use):
+        return jnp.sum(jnp.sin(L.maybe_bf16_cotangent(x, use)) ** 2)
+
+    g_plain = jax.grad(lambda v: f(v, False))(x)
+    g_bar = jax.grad(lambda v: f(v, True))(x)
+    # value path identical; gradient rounded through bf16
+    np.testing.assert_allclose(np.asarray(g_bar), np.asarray(g_plain),
+                               rtol=1e-2, atol=1e-2)
+    assert not np.array_equal(np.asarray(g_bar), np.asarray(g_plain))
+
+
+def test_cross_entropy_matches_manual():
+    logits = jax.random.normal(jax.random.PRNGKey(8), (2, 4, 16))
+    labels = jax.random.randint(jax.random.PRNGKey(9), (2, 4), 0, 16)
+    loss = L.cross_entropy(logits, labels, z_loss=0.0)
+    lf = np.asarray(logits, np.float64)
+    p = np.exp(lf - lf.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    nll = -np.log(p[np.arange(2)[:, None], np.arange(4)[None], np.asarray(labels)])
+    np.testing.assert_allclose(float(loss), nll.mean(), rtol=1e-5)
+
+
+def test_padded_vocab_masking():
+    from repro.configs import get_reduced
+    from repro.models.model import Model
+    cfg = get_reduced("whisper-base").replace(vocab_size=250)  # pad → 256
+    assert cfg.padded_vocab == 256
+    model = Model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.zeros((1, 8), jnp.int32),
+             "labels": jnp.zeros((1, 8), jnp.int32),
+             "frames": jnp.zeros((1, cfg.encoder_seq, cfg.d_model))}
+    logits, _ = model.forward(params, batch)
+    assert logits.shape[-1] == 256
+    pad = np.asarray(logits[..., 250:], np.float32)
+    assert (pad <= -1e29).all()  # padding columns carry no mass

@@ -1,0 +1,111 @@
+"""Lemma 1 (optimal block size) + pipeline simulators/executor."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pipeline as pl
+
+pos = st.floats(min_value=1e-6, max_value=10.0, allow_nan=False)
+
+
+@settings(max_examples=200, deadline=None)
+@given(k1=pos, k2=pos, k3=pos, a=pos,
+       d=st.integers(min_value=2_000, max_value=200_000))
+def test_lemma1_beats_brute_force(k1, k2, k3, a, d):
+    """The engine-facing integer block choice is never worse than a dense
+    brute force over block sizes (Eq.-2 cost model). d is large — the
+    paper's Lemma 1 derivation treats s = d/b as continuous, so its bound
+    only tightens as s grows (the paper's own regime: millions of edges)."""
+    b_star, t_star = pl.optimal_integer_blocks(d, k1, k2, k3, a)
+    candidates = np.unique(np.geomspace(1, d, 128).astype(int))
+    t_best = min(pl.estimate_total_time(d, int(b), k1, k2, k3, a)
+                 for b in candidates)
+    assert t_star <= t_best * 1.05 + 1e-12
+
+
+@settings(max_examples=100, deadline=None)
+@given(k1=pos, k2=pos, k3=pos, a=pos,
+       d=st.integers(min_value=10, max_value=100_000))
+def test_lemma1_tmin_matches_eq2(k1, k2, k3, a, d):
+    """Lemma-1 closed-form T_min equals Eq. 2 evaluated at b_opt (when
+    b_opt is interior, i.e. not clipped to [1, d])."""
+    res = pl.optimal_block_size(d, k1, k2, k3, a)
+    if res.b_opt in (1.0, float(d)):
+        return  # clipped — closed form assumed interior optimum
+    t_eq2 = pl.estimate_total_time(d, res.b_opt, k1, k2, k3, a)
+    s = d / res.b_opt
+    if s < 2:  # Eq. 2 piecewise form needs s >= 2
+        return
+    assert t_eq2 == pytest.approx(res.t_min, rel=0.15)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.tuples(pos, pos, pos), min_size=1, max_size=20))
+def test_lockstep_simulator_equals_eq1(stage_costs):
+    """simulate_lockstep on equal blocks == Eq. (1)."""
+    tn = [c[0] for c in stage_costs]
+    tc = [c[1] for c in stage_costs]
+    tu = [c[2] for c in stage_costs]
+    s = len(tn)
+    sim = pl.simulate_lockstep(tn, tc, tu)
+    if all(x == tn[0] for x in tn) and all(x == tc[0] for x in tc) \
+            and all(x == tu[0] for x in tu):
+        if s == 1:
+            expect = tn[0] + tc[0] + tu[0]
+        else:
+            expect = (tn[0] + max(tn[0], tc[0])
+                      + (s - 2) * max(tn[0], tc[0], tu[0])
+                      + max(tc[0], tu[0]) + tu[0])
+        assert sim == pytest.approx(expect)
+    # async pipeline is a lower bound on lockstep
+    assert pl.simulate_async(tn, tc, tu) <= sim + 1e-9
+
+
+def test_pipelined_executor_matches_sequential_results():
+    """The 3-thread rotating-buffer executor produces the same outputs as
+    sequential execution (correctness of the shuffle mechanism)."""
+    n = 16
+    out_seq, out_pipe = [], []
+
+    def make(stages_out):
+        def download(i, slot):
+            slot["x"] = i * 10
+
+        def compute(i, slot):
+            slot["y"] = slot["x"] + 1
+
+        def upload(i, slot):
+            stages_out.append((i, slot["y"]))
+
+        return download, compute, upload
+
+    pl.run_sequential(*make(out_seq), n)
+    pl.PipelinedExecutor(*make(out_pipe)).run(n)
+    assert sorted(out_pipe) == sorted(out_seq) == [(i, i * 10 + 1)
+                                                   for i in range(n)]
+
+
+def test_calibrate_recovers_coefficients():
+    rng = np.random.default_rng(0)
+    k1, k2, k3, a = 2e-6, 7e-6, 3e-6, 5e-4
+    samples = []
+    for b in [64, 128, 256, 512, 1024]:
+        noise = 1 + 0.01 * rng.standard_normal(3)
+        samples.append((b, k1 * b * noise[0], a + k2 * b * noise[1],
+                        k3 * b * noise[2]))
+    e1, e2, e3, ea = pl.calibrate(samples)
+    assert e1 == pytest.approx(k1, rel=0.1)
+    assert e2 == pytest.approx(k2, rel=0.1)
+    assert e3 == pytest.approx(k3, rel=0.1)
+    assert ea == pytest.approx(a, rel=0.3)
+
+
+def test_optimal_integer_blocks_bounds():
+    b, t = pl.optimal_integer_blocks(10_000, 2e-6, 7e-6, 3e-6, 5e-4)
+    assert 1 <= b <= 10_000
+    # integer choice is within 5% of the continuous optimum
+    res = pl.optimal_block_size(10_000, 2e-6, 7e-6, 3e-6, 5e-4)
+    t_cont = pl.estimate_total_time(10_000, res.b_opt, 2e-6, 7e-6, 3e-6, 5e-4)
+    assert t <= t_cont * 1.05

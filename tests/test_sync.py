@@ -1,0 +1,67 @@
+"""Sync caching (LRU), lazy uploading (Alg. 3), sync skipping predicate."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sync import LRUVertexCache, can_skip_sync, lazy_exchange_plan
+
+ids = st.lists(st.integers(min_value=0, max_value=1000), max_size=60)
+
+
+def test_lru_basic():
+    c = LRUVertexCache(capacity=4)
+    c.insert(np.array([1, 2, 3], dtype=np.int64))
+    hit = c.lookup(np.array([1, 2, 9], dtype=np.int64))
+    assert list(hit) == [True, True, False]
+    # fill beyond capacity; least-recently-used evicted first
+    c.tick()
+    c.lookup(np.array([1], dtype=np.int64))  # bump 1
+    c.insert(np.array([4, 5], dtype=np.int64))  # evicts lowest-weight
+    assert len(c) == 4
+    assert c.lookup(np.array([1], dtype=np.int64))[0]  # bumped id survived
+
+
+def test_lru_eviction_order():
+    c = LRUVertexCache(capacity=3, bump=5.0)
+    c.insert(np.array([10], dtype=np.int64))
+    for _ in range(4):
+        c.tick()
+    c.insert(np.array([20, 30], dtype=np.int64))
+    c.insert(np.array([40], dtype=np.int64))  # 10 has lowest weight → evicted
+    assert not c.lookup(np.array([10], dtype=np.int64))[0]
+    assert len(c) == 3
+
+
+def test_lru_invalidate():
+    c = LRUVertexCache(capacity=8)
+    c.insert(np.arange(5, dtype=np.int64))
+    c.invalidate(np.array([1, 3], dtype=np.int64))
+    hit = c.lookup(np.arange(5, dtype=np.int64))
+    assert list(hit) == [True, False, True, False, True]
+
+
+@settings(max_examples=100, deadline=None)
+@given(upd=st.lists(ids, min_size=1, max_size=5),
+       qry=st.lists(ids, min_size=1, max_size=5))
+def test_lazy_exchange_plan_properties(upd, qry):
+    updated = [np.array(sorted(set(u)), dtype=np.int64) for u in upd]
+    queried = [np.array(sorted(set(q)), dtype=np.int64) for q in qry]
+    gqq, uploads = lazy_exchange_plan(updated, queried)
+    all_q = set()
+    for q in queried:
+        all_q.update(q.tolist())
+    assert set(gqq.tolist()) == all_q  # gqq = union of queries
+    for u_in, u_out in zip(updated, uploads):
+        out = set(u_out.tolist())
+        assert out == set(u_in.tolist()) & all_q  # upload = updated ∩ queried
+    # lazy never uploads more than dense
+    assert sum(u.size for u in uploads) <= sum(u.size for u in updated)
+
+
+def test_can_skip_sync():
+    n = 10
+    boundary = np.zeros(n, dtype=bool)
+    boundary[7] = True
+    masks = [boundary, boundary]
+    assert can_skip_sync([np.array([1, 2]), np.array([3])], masks)
+    assert not can_skip_sync([np.array([1, 7]), np.array([3])], masks)
+    assert can_skip_sync([np.empty(0, np.int64), np.empty(0, np.int64)], masks)
