@@ -1,0 +1,23 @@
+"""The "upper system" half of the middleware (DESIGN.md §4).
+
+GX-Plug splits responsibilities between accelerator-side *daemons*
+(``repro.kernels``, ``repro.core.engine``) and the distributed *upper
+system* that feeds them.  This package is the upper system, organised by
+the paper's three optimization horizons:
+
+* ``sharding``    — intra-iteration: logical-axis partitioning rules that
+                    place every tensor dimension on a mesh axis (the
+                    GraphX-style partition/shuffle model, generalised to
+                    dense pytrees).
+* ``collectives`` — inter-iteration: compressed synchronization (int8/int4
+                    quantization with error feedback) — the sync-caching /
+                    volume-reduction analogue for gradient exchange.
+* ``fault``       — beyond-iteration: fleet monitoring, straggler
+                    detection and Lemma-2 rebalancing, and elastic re-mesh
+                    planning after host loss.
+
+Modules are imported lazily by callers (``from repro.dist import sharding
+as shd``); importing this package touches no jax device state.
+"""
+
+__all__ = ["sharding", "collectives", "fault"]

@@ -1,0 +1,130 @@
+"""Compressed gradient synchronization (inter-iteration, DESIGN.md §4.2).
+
+The paper's sync caching/skipping cuts what crosses the wire between
+iterations of the graph engine; the training analogue here cuts the
+gradient all-reduce: tensors are quantized to int8 (or int4) with a single
+per-tensor scale before the reduce, and the rounding error is *fed back*
+— added to the next iteration's tensor — so no gradient mass is ever
+lost, only delayed (the EF-SGD scheme; see PAPERS.md).
+
+Two implementations share the same math:
+
+* ``compressed_allreduce_ref`` — pure host loop over per-shard arrays, the
+  oracle for tests and for reasoning about error bounds;
+* ``make_compressed_allreduce`` — a ``shard_map`` program over a mesh axis
+  that runs the quantize → psum → dequantize round on-device per shard.
+
+The reference psum carries dequantized values (each shard has its own
+scale, so the sum cannot stay int on a heterogeneous wire without a
+gather of scales); wire accounting uses ``collective_bytes_saved``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+_EPS = 1e-12
+
+
+# --------------------------------------------------------------------------
+# symmetric per-tensor int quantization
+# --------------------------------------------------------------------------
+def quantize_int(x, bits: int = 8):
+    """(q, scale): symmetric round-to-nearest onto ``bits``-bit integers.
+
+    ``q`` is held in int8 storage for any ``bits`` ≤ 8 (int4 values live in
+    [-7, 7]); ``scale`` is a float32 scalar with ``|dequant − x| ≤ scale/2``
+    elementwise.  All-zero inputs quantize to zeros (scale floors at eps).
+    """
+    if not 2 <= bits <= 8:
+        raise ValueError(f"bits must be in [2, 8], got {bits}")
+    qmax = (1 << (bits - 1)) - 1
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, _EPS) / qmax
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -qmax, qmax).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+quantize_int8 = functools.partial(quantize_int, bits=8)
+quantize_int4 = functools.partial(quantize_int, bits=4)
+dequantize_int8 = dequantize_int
+dequantize_int4 = dequantize_int
+
+
+# --------------------------------------------------------------------------
+# error-feedback all-reduce
+# --------------------------------------------------------------------------
+def _round(x, residual, bits: int):
+    """One shard's half of the EF round: returns (sent, new_residual)."""
+    t = x + residual
+    q, s = quantize_int(t, bits)
+    sent = dequantize_int(q, s)
+    return sent, t - sent
+
+
+def compressed_allreduce_ref(locals_, residuals, *, bits: int = 8):
+    """Host-loop reference over per-shard lists.
+
+    Each shard sends ``quantize(local + residual)`` and keeps the rounding
+    remainder as its next residual; every shard receives the mean of the
+    dequantized payloads.  Returns ``(means, new_residuals)`` — ``means``
+    holds one (identical) mean per shard, mirroring what each shard's
+    all-reduce output would be.
+    """
+    if len(locals_) != len(residuals):
+        raise ValueError("one residual per shard required")
+    sents, new_res = [], []
+    for x, r in zip(locals_, residuals):
+        sent, nr = _round(x, r, bits)
+        sents.append(sent)
+        new_res.append(nr)
+    mean = sum(sents[1:], start=sents[0]) / len(sents)
+    return [mean for _ in sents], new_res
+
+
+def make_compressed_allreduce(mesh, axis_name: str, *, bits: int = 8):
+    """``shard_map`` version of the EF all-reduce over one mesh axis.
+
+    The returned function takes ``(tree, residual_tree)`` of arrays whose
+    leading dim is sharded on ``axis_name`` and returns ``(mean_tree,
+    new_residual_tree)`` with the same shardings.  Each shard quantizes its
+    slice independently (local scale), so compression adapts to per-shard
+    magnitude — the behaviour ``compressed_allreduce_ref`` oracles.
+    """
+    size = mesh.shape[axis_name]
+    spec = P(axis_name)
+
+    def block(xs, residuals):
+        leaves_x, treedef = jax.tree.flatten(xs)
+        leaves_r = treedef.flatten_up_to(residuals)
+        means, new_res = [], []
+        for x, r in zip(leaves_x, leaves_r):
+            sent, nr = _round(x, r, bits)
+            means.append(jax.lax.psum(sent, axis_name) / size)
+            new_res.append(nr)
+        return treedef.unflatten(means), treedef.unflatten(new_res)
+
+    fn = shard_map(block, mesh=mesh, in_specs=(spec, spec),
+                   out_specs=(spec, spec))
+    return jax.jit(fn)
+
+
+def collective_bytes_saved(wire_bytes: int, *, bits: int = 8,
+                           baseline_bits: int = 16) -> int:
+    """Wire bytes saved by an ``bits``-bit payload vs the baseline format.
+
+    The baseline is bf16: gradients already travel in bf16 through the
+    ``bf16_cotangent`` barrier (models/layers.py), so int8 halves the
+    volume — ``collective_bytes_saved(1000) == 500``.  Per-tensor scale
+    overhead (4 bytes/tensor) is ignored as negligible at gradient sizes.
+    """
+    return wire_bytes - (wire_bytes * bits) // baseline_bits

@@ -1,0 +1,208 @@
+"""Fleet health, straggler rebalancing, elastic re-mesh (beyond-iteration,
+DESIGN.md §4.3).
+
+The paper's workload balancing (Sec. III-C, Lemmas 2/3 in core/balance.py)
+tunes shard sizes to heterogeneous capacities *between* runs; this module
+runs the same math continuously against a live fleet:
+
+* ``FleetMonitor`` ingests per-host step times, flags stragglers
+  (median-based — robust while fewer than half the fleet lags), converts
+  observed costs into Lemma-2 batch fractions, and on host death plans a
+  replacement mesh from the survivors;
+* ``elastic_plan`` re-meshes N surviving devices: model parallelism is
+  load-bearing (a 72B model does not fit one host) so the model axis is
+  preserved exactly and the *data* axis shrinks to the largest power of
+  two that fits — bounded recompiles, and batch divisibility survives;
+* ``reassign_shards`` hands the orphaned data shards of dead hosts to
+  survivors in proportion to their Lemma-2 entitlement.
+
+Everything here is host-side numpy — no jax device state — so monitors
+can run in the launcher process of every host.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core import balance
+
+#: single-pod data-axis width of the production mesh (launch/mesh.py);
+#: data shards beyond this spill into the "pod" axis.
+MAX_DATA_PER_POD = 16
+
+
+# --------------------------------------------------------------------------
+# elastic mesh planning
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """A re-mesh target: axis sizes + names, smallest axis last = model."""
+
+    shape: tuple[int, ...]
+    axis_names: tuple[str, ...]
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+    @property
+    def devices_used(self) -> int:
+        return self.size
+
+    @property
+    def model_parallel(self) -> int:
+        return self.shape[-1]
+
+    @property
+    def data_parallel(self) -> int:
+        return self.size // self.shape[-1]
+
+
+def elastic_plan(num_devices: int, *, model_parallel: int = 16,
+                 max_data: int = MAX_DATA_PER_POD) -> MeshPlan:
+    """Mesh for ``num_devices`` survivors, preserving the model axis.
+
+    The data-parallel width is the largest power of two ≤
+    ``num_devices // model_parallel`` (pow2 keeps microbatch divisibility
+    and bounds recompilation to log₂ distinct shapes across a failure
+    cascade); widths beyond ``max_data`` spill into a leading "pod" axis,
+    matching the production mesh layout.  Raises ``ValueError`` when the
+    survivors cannot host even one model replica.
+    """
+    if model_parallel < 1:
+        raise ValueError(f"model_parallel must be ≥ 1, got {model_parallel}")
+    if num_devices < model_parallel:
+        raise ValueError(
+            f"{num_devices} devices cannot host model_parallel="
+            f"{model_parallel}; add hosts or shrink the model axis")
+    dp = 1 << int(math.floor(math.log2(num_devices // model_parallel)))
+    if dp > max_data:
+        return MeshPlan((dp // max_data, max_data, model_parallel),
+                        ("pod", "data", "model"))
+    return MeshPlan((dp, model_parallel), ("data", "model"))
+
+
+# --------------------------------------------------------------------------
+# straggler detection
+# --------------------------------------------------------------------------
+def detect_stragglers(times, *, factor: float = 1.5) -> np.ndarray:
+    """Boolean mask of hosts slower than ``factor`` × the fleet median.
+
+    The median tolerates up to half the fleet lagging; ``factor`` absorbs
+    benign jitter (the paper's balancing only pays off when the imbalance
+    exceeds the rebalance cost).
+    """
+    t = np.asarray(times, dtype=np.float64)
+    finite = t[np.isfinite(t)]
+    if finite.size == 0:
+        return np.zeros(t.shape, dtype=bool)
+    return t > factor * float(np.median(finite))
+
+
+def reassign_shards(num_shards: int, fractions, *, cap: int | None = None
+                    ) -> np.ndarray:
+    """Assigns ``num_shards`` data shards to hosts ∝ ``fractions``.
+
+    Greedy largest-remaining-entitlement: every shard lands on the live
+    host (``fractions > 0``) furthest below its Lemma-2 entitlement,
+    never exceeding ``cap`` shards per host.  Returns the host index per
+    shard; raises ``ValueError`` if no feasible assignment exists (all
+    hosts dead, or total capacity < num_shards).
+    """
+    frac = np.asarray(fractions, dtype=np.float64)
+    if frac.ndim != 1 or np.any(frac < 0) or frac.sum() <= 0:
+        raise ValueError("fractions must be non-negative with a live host")
+    cap_eff = num_shards if cap is None else int(cap)
+    entitlement = frac / frac.sum() * num_shards
+    load = np.zeros(frac.size)
+    out = np.empty(num_shards, dtype=np.int64)
+    for s in range(num_shards):
+        deficit = entitlement - load
+        deficit[frac <= 0] = -np.inf
+        deficit[load >= cap_eff] = -np.inf
+        h = int(np.argmax(deficit))
+        if not np.isfinite(deficit[h]):
+            raise ValueError(
+                f"cannot place shard {s}: live capacity exhausted "
+                f"(cap={cap_eff})")
+        out[s] = h
+        load[h] += 1
+    return out
+
+
+# --------------------------------------------------------------------------
+# fleet monitor
+# --------------------------------------------------------------------------
+class FleetMonitor:
+    """Per-host step-time window → stragglers, Lemma-2 fractions, re-mesh.
+
+    One instance lives in the launcher; hosts report wall-clock step times
+    via ``record``.  ``batch_fractions`` is safe to apply every step (it
+    degrades to uniform with no data); ``remesh`` is the failure path.
+    """
+
+    def __init__(self, num_hosts: int, model_parallel: int = 1, *,
+                 window: int = 32, straggler_factor: float = 1.5):
+        if num_hosts < 1:
+            raise ValueError("need at least one host")
+        self.num_hosts = num_hosts
+        self.model_parallel = model_parallel
+        self.straggler_factor = straggler_factor
+        self._times = [collections.deque(maxlen=window)
+                       for _ in range(num_hosts)]
+        self._failed = np.zeros(num_hosts, dtype=bool)
+
+    # -- ingestion ---------------------------------------------------------
+    def record(self, host: int, seconds: float) -> None:
+        self._times[host].append(float(seconds))
+
+    def mark_failed(self, host: int) -> None:
+        self._failed[host] = True
+
+    @property
+    def failed(self) -> np.ndarray:
+        return self._failed.copy()
+
+    @property
+    def alive_hosts(self) -> int:
+        return int((~self._failed).sum())
+
+    # -- derived views -----------------------------------------------------
+    def mean_times(self) -> np.ndarray:
+        """Windowed mean step time per host; hosts with no reports (or
+        dead) read as NaN."""
+        out = np.full(self.num_hosts, np.nan)
+        for h, d in enumerate(self._times):
+            if d and not self._failed[h]:
+                out[h] = float(np.mean(d))
+        return out
+
+    def stragglers(self) -> np.ndarray:
+        """Median-based straggler mask over live, reporting hosts."""
+        return detect_stragglers(self.mean_times(),
+                                 factor=self.straggler_factor)
+
+    def batch_fractions(self) -> np.ndarray:
+        """Lemma-2 batch fractions: live hosts get load ∝ 1/step-time
+        (capacity), dead hosts get exactly 0; sums to 1."""
+        t = self.mean_times()
+        live = ~self._failed
+        costs = np.where(np.isfinite(t), t, np.nanmean(t[live])
+                         if np.any(np.isfinite(t[live])) else 1.0)
+        frac = np.zeros(self.num_hosts)
+        frac[live] = balance.lemma2_fractions(costs[live])
+        return frac
+
+    # -- failure path ------------------------------------------------------
+    def remesh(self, *, devices_per_host: int) -> MeshPlan:
+        """Plan the survivor mesh after the marked failures."""
+        return elastic_plan(self.alive_hosts * devices_per_host,
+                            model_parallel=self.model_parallel)
+
+    def reassign(self, num_shards: int, *, cap: int | None = None
+                 ) -> np.ndarray:
+        """Lemma-2 shard → host assignment over the current fleet state."""
+        return reassign_shards(num_shards, self.batch_fractions(), cap=cap)

@@ -1,0 +1,132 @@
+"""Deterministic stand-in for the slice of `hypothesis` the suite uses.
+
+Tier-1 collection must never die on an optional package: when hypothesis
+is not installed, the property tests in test_balance / test_sync /
+test_pipeline fall back to this module and run against a fixed-seed
+random sample (capped at 50 examples) instead of a shrinking search.
+Usage, mirroring the real import:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, strategies as st
+
+Only the strategy combinators the suite actually uses are implemented:
+``floats``, ``integers``, ``lists``, ``tuples``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+
+import numpy as np
+
+_MAX_EXAMPLES = 50  # cap regardless of @settings — no shrinker, keep it fast
+
+
+class _Strategy:
+    def example(self, rng):  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class _Floats(_Strategy):
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def example(self, rng):
+        # log-uniform when the range spans decades (matches how the suite
+        # uses floats: cost/time coefficients), uniform otherwise
+        if self.lo > 0 and self.hi / self.lo > 1e3:
+            return float(np.exp(rng.uniform(np.log(self.lo), np.log(self.hi))))
+        return float(rng.uniform(self.lo, self.hi))
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def example(self, rng):
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Lists(_Strategy):
+    def __init__(self, elem, min_size, max_size):
+        self.elem, self.lo, self.hi = elem, min_size, max_size
+
+    def example(self, rng):
+        n = int(rng.integers(self.lo, self.hi + 1))
+        return [self.elem.example(rng) for _ in range(n)]
+
+
+class _Tuples(_Strategy):
+    def __init__(self, elems):
+        self.elems = elems
+
+    def example(self, rng):
+        return tuple(e.example(rng) for e in self.elems)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (import as ``st``)."""
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, allow_nan=False,
+               allow_infinity=False, **_):
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def integers(min_value=0, max_value=100, **_):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=10, **_):
+        return _Lists(elem, min_size, max_size)
+
+    @staticmethod
+    def tuples(*elems):
+        return _Tuples(elems)
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Runs the test once per drawn example, fixed seed, no shrinking.
+
+    On failure the offending example is printed so the case can be
+    reproduced under real hypothesis.
+    """
+
+    def decorator(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = np.random.default_rng(0)
+            n = min(getattr(wrapper, "_max_examples", _MAX_EXAMPLES),
+                    _MAX_EXAMPLES)
+            for _ in range(n):
+                drawn_args = tuple(s.example(rng) for s in arg_strategies)
+                drawn_kw = {k: s.example(rng)
+                            for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *drawn_args, **drawn_kw, **kwargs)
+                except BaseException:
+                    print(f"falsifying example: args={drawn_args} "
+                          f"kwargs={drawn_kw}", file=sys.stderr)
+                    raise
+            return None
+
+        # hide the drawn parameters from pytest's fixture resolution, as
+        # real hypothesis does (it rewrites the signature to zero-arg)
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature([])
+        return wrapper
+
+    return decorator
+
+
+def settings(max_examples=_MAX_EXAMPLES, deadline=None, **_):
+    """Records the example budget on the (already-@given-wrapped) test."""
+
+    def decorator(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return decorator

@@ -1,7 +1,10 @@
 """Lemmas 2 & 3 (workload balancing) — property tests vs brute force."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep — deterministic in-repo fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import balance
 

@@ -1,0 +1,207 @@
+"""Property-style tests for the repro.dist layer: spec_for divisibility
+fallback on arbitrary mesh shapes, quantize→dequantize error bounds
+(int8/int4), and elastic_plan / reassign_shards invariants.
+
+Mesh-shape properties run against a duck-typed mesh (spec_for and
+make_rules only read ``axis_names`` / ``shape``), so production meshes
+like (2, 16, 16) are exercised on a 1-CPU container without device
+emulation.
+"""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import collectives as C, fault, sharding as shd
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep — deterministic in-repo fallback
+    from _hypothesis_fallback import given, settings, strategies as st
+
+
+class ShapeOnlyMesh:
+    """Axis names + sizes, nothing else — enough for rule/spec logic."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+MESHES = [
+    ShapeOnlyMesh(data=4, model=2),
+    ShapeOnlyMesh(data=16, model=16),
+    ShapeOnlyMesh(pod=2, data=16, model=16),
+    ShapeOnlyMesh(data=1, model=1),
+]
+
+
+# --------------------------------------------------------------------------
+# spec_for: divisibility fallback + axis uniqueness on every mesh/strategy
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("mesh", MESHES, ids=lambda m: "x".join(
+    f"{k}{v}" for k, v in m.shape.items()))
+@pytest.mark.parametrize("strategy", shd.STRATEGIES)
+def test_spec_fallback_and_uniqueness(mesh, strategy):
+    rules = shd.make_rules(mesh, strategy=strategy)
+    rng = np.random.default_rng(0)
+    logical = (None,) + shd.LOGICAL_AXES
+    for _ in range(200):
+        ndim = int(rng.integers(1, 5))
+        axes = tuple(logical[i] for i in rng.integers(0, len(logical), ndim))
+        shape = tuple(int(rng.integers(1, 70)) for _ in range(ndim))
+        spec = shd.spec_for(shape, axes, mesh, rules)
+        assert len(spec) <= ndim
+        used = []
+        for dim, part in itertools.zip_longest(shape, spec):
+            if part is None:
+                continue
+            names = part if isinstance(part, tuple) else (part,)
+            prod = 1
+            for a in names:
+                prod *= mesh.shape[a]
+            assert dim % prod == 0, (shape, axes, spec)
+            used.extend(names)
+        assert len(used) == len(set(used)), (shape, axes, spec)
+
+
+@pytest.mark.parametrize("strategy", shd.STRATEGIES)
+def test_spec_non_divisible_always_replicates(strategy):
+    """Prime dims larger than 1 can never shard on a >1 mesh axis."""
+    mesh = ShapeOnlyMesh(data=4, model=2)
+    rules = shd.make_rules(mesh, strategy=strategy)
+    for ax in shd.LOGICAL_AXES:
+        assert shd.spec_for((7,), (ax,), mesh, rules) == P()
+
+
+def test_rules_reject_unknown_strategy():
+    with pytest.raises(ValueError):
+        shd.make_rules(ShapeOnlyMesh(data=2), strategy="3d")
+
+
+# --------------------------------------------------------------------------
+# quantization error bounds
+# --------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(scale_pow=st.integers(min_value=-3, max_value=3),
+       seed=st.integers(min_value=0, max_value=1000))
+def test_quantize_roundtrip_bound_int8_int4(scale_pow, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((64,)) * 10.0 ** scale_pow,
+                    jnp.float32)
+    for bits in (8, 4):
+        q, s = C.quantize_int(x, bits)
+        assert q.dtype == jnp.int8
+        qmax = (1 << (bits - 1)) - 1
+        assert int(jnp.max(jnp.abs(q))) <= qmax
+        err = np.abs(np.asarray(C.dequantize_int(q, s)) - np.asarray(x))
+        assert err.max() <= float(s) / 2 + 1e-6 * float(s)
+
+
+def test_quantize_all_zero_input():
+    q, s = C.quantize_int8(jnp.zeros((16,), jnp.float32))
+    assert int(jnp.max(jnp.abs(q))) == 0
+    np.testing.assert_array_equal(np.asarray(C.dequantize_int8(q, s)),
+                                  np.zeros(16))
+
+
+def test_int4_error_feedback_conserves_mass():
+    """20 rounds of int4 EF: wire total + residual == input total."""
+    rng = np.random.default_rng(3)
+    res = jnp.zeros((32,), jnp.float32)
+    tot_in = np.zeros(32)
+    tot_wire = np.zeros(32)
+    for _ in range(20):
+        x = jnp.asarray(rng.standard_normal(32), jnp.float32)
+        tot_in += np.asarray(x)
+        q, s = C.quantize_int4(x + res)
+        sent = C.dequantize_int4(q, s)
+        res = x + res - sent
+        tot_wire += np.asarray(sent)
+    np.testing.assert_allclose(tot_wire + np.asarray(res), tot_in, atol=1e-4)
+
+
+def test_bytes_saved_int4():
+    assert C.collective_bytes_saved(1000, bits=4) == 750
+
+
+# --------------------------------------------------------------------------
+# elastic_plan invariants
+# --------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(min_value=1, max_value=2048),
+       mp_pow=st.integers(min_value=0, max_value=5))
+def test_elastic_plan_invariants(n, mp_pow):
+    mp = 1 << mp_pow
+    if n < mp:
+        with pytest.raises(ValueError):
+            fault.elastic_plan(n, model_parallel=mp)
+        return
+    plan = fault.elastic_plan(n, model_parallel=mp)
+    # never oversubscribes the survivors
+    assert plan.size <= n
+    # model axis preserved exactly; data width is a power of two
+    assert plan.shape[-1] == mp
+    assert plan.model_parallel == mp
+    dp = plan.data_parallel
+    assert dp & (dp - 1) == 0
+    # maximal: doubling the data width would not fit
+    assert 2 * plan.size > n
+    assert len(plan.shape) == len(plan.axis_names)
+
+
+def test_elastic_plan_pod_spill():
+    plan = fault.elastic_plan(1024, model_parallel=16)
+    assert plan.shape == (4, 16, 16)
+    assert plan.axis_names == ("pod", "data", "model")
+
+
+# --------------------------------------------------------------------------
+# reassign_shards invariants
+# --------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(num_shards=st.integers(min_value=1, max_value=64),
+       num_hosts=st.integers(min_value=1, max_value=12),
+       num_dead=st.integers(min_value=0, max_value=11),
+       seed=st.integers(min_value=0, max_value=1000))
+def test_reassign_shards_invariants(num_shards, num_hosts, num_dead, seed):
+    rng = np.random.default_rng(seed)
+    num_dead = min(num_dead, num_hosts - 1)
+    frac = rng.uniform(0.1, 1.0, num_hosts)
+    frac[rng.choice(num_hosts, size=num_dead, replace=False)] = 0.0
+    frac /= frac.sum()
+    alive = int((frac > 0).sum())
+    cap = -(-num_shards // alive) + 1  # ceil + slack: always feasible
+    out = fault.reassign_shards(num_shards, frac, cap=cap)
+    # every shard reassigned, only to live hosts
+    assert out.shape == (num_shards,)
+    assert np.all(frac[out] > 0)
+    # no host beyond cap
+    counts = np.bincount(out, minlength=num_hosts)
+    assert counts.max() <= cap
+    # uncapped, the greedy assignment tracks the Lemma-2 entitlement: no
+    # host exceeds its share by more than one shard (with a cap, overflow
+    # must legitimately spill past entitlement)
+    free = np.bincount(fault.reassign_shards(num_shards, frac),
+                       minlength=num_hosts)
+    assert np.all(free <= np.ceil(frac * num_shards) + 1)
+
+
+def test_reassign_shards_infeasible_cap_raises():
+    with pytest.raises(ValueError):
+        fault.reassign_shards(10, [0.5, 0.5], cap=4)
+    with pytest.raises(ValueError):
+        fault.reassign_shards(4, [0.0, 0.0])
+
+
+def test_monitor_reassign_skips_failed_host():
+    mon = fault.FleetMonitor(num_hosts=3, model_parallel=1)
+    for _ in range(4):
+        for h in range(3):
+            mon.record(h, 1.0)
+    mon.mark_failed(0)
+    out = mon.reassign(8)
+    assert 0 not in set(out.tolist())
+    assert out.shape == (8,)

@@ -1,6 +1,9 @@
 """Sync caching (LRU), lazy uploading (Alg. 3), sync skipping predicate."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep — deterministic in-repo fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.sync import LRUVertexCache, can_skip_sync, lazy_exchange_plan
 
