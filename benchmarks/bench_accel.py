@@ -1,48 +1,76 @@
 """Fig. 8 analogue: acceleration ratio of the middleware-attached engine
 over the no-accelerator upper system.
 
-Competitors:
+Competitors (``repro.plug`` daemons behind one ``run_blocks`` contract):
   naive       — per-edge host loop ("GraphX/PowerGraph without accelerator")
   blocked     — daemon block programs, sequential 3-step flow
   vectorized  — fused-jit daemon (this repo's optimized path)
 The paper reports 4–25× for CPU/GPU accelerators; on one CPU core the
 vectorized/jit path plays the accelerator role.
+
+``--quick`` runs a reduced matrix and writes the ``BENCH_plug.json``
+tier-2 baseline (scripts/verify.sh --tier2).
 """
 from __future__ import annotations
 
+import argparse
+
 from benchmarks.common import DATASETS, save, timeit
-from repro.core.engine import EngineOptions, GXEngine
+from repro import plug
 from repro.graph.algorithms import label_prop, pagerank, sssp_bf
 
+DAEMONS = ("naive", "blocked", "vectorized")
 
-def run(small: bool = True) -> dict:
+
+def run(small: bool = True, quick: bool = False) -> dict:
     g = DATASETS["orkut-mini"]()
-    if small:  # naive is O(E) python per iteration — subsample for CI speed
+    if quick:  # tier-2 CI slice: small graph, few iterations
+        from repro.graph import generate
+        g = generate.rmat(300, 2_400, seed=1)
+        iters = {"pagerank": 2, "sssp_bf": 3, "label_prop": 2}
+    elif small:  # naive is O(E) python per iteration — subsample for speed
         from repro.graph import generate
         g = generate.rmat(2_000, 20_000, seed=1)
-    iters = {"pagerank": 5, "sssp_bf": 8, "label_prop": 5}
+        iters = {"pagerank": 5, "sssp_bf": 8, "label_prop": 5}
+    else:
+        iters = {"pagerank": 5, "sssp_bf": 8, "label_prop": 5}
     algs = {"pagerank": pagerank, "sssp_bf": sssp_bf, "label_prop": label_prop}
     out = {}
     for name, algf in algs.items():
         prog = algf(g)
         times = {}
-        for mode in ("naive", "blocked", "vectorized"):
-            eng = GXEngine(g, prog, num_shards=1,
-                           options=EngineOptions(execution=mode,
-                                                 block_size=2048))
-            times[mode] = timeit(lambda e=eng: e.run(max_iterations=iters[name]),
-                                 repeat=1, warmup=0)
+        for daemon in DAEMONS:
+            mw = plug.Middleware(
+                g, prog, daemon=daemon, num_shards=1,
+                options=plug.PlugOptions(block_size=2048))
+            times[daemon] = timeit(
+                lambda m=mw: m.run(max_iterations=iters[name]),
+                repeat=1, warmup=0)
         out[name] = {
             **times,
             "speedup_blocked": times["naive"] / times["blocked"],
             "speedup_vectorized": times["naive"] / times["vectorized"],
         }
-    save("bench_accel", out)
+    out["_meta"] = {"api": "repro.plug.Middleware", "quick": quick,
+                    "graph": {"num_vertices": g.num_vertices,
+                              "num_edges": g.num_edges},
+                    "iterations": iters}
+    save("BENCH_plug" if quick else "bench_accel", out)
     return out
 
 
-if __name__ == "__main__":
-    for alg, r in run().items():
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tier-2 slice; writes BENCH_plug.json baseline")
+    args = ap.parse_args()
+    for alg, r in run(quick=args.quick).items():
+        if alg.startswith("_"):
+            continue
         print(f"{alg:12s} naive={r['naive']:.2f}s blocked={r['blocked']:.2f}s "
               f"vectorized={r['vectorized']:.3f}s "
               f"accel={r['speedup_vectorized']:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

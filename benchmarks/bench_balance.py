@@ -16,15 +16,15 @@ import time
 import numpy as np
 
 from benchmarks.common import DATASETS, save
+from repro import plug
 from repro.core import balance
-from repro.core.engine import EngineOptions, GXEngine
 from repro.graph.algorithms import sssp_bf
 from repro.graph.partition import partition_contiguous
 
 
 def _measure_per_edge_cost(g, prog) -> float:
-    eng = GXEngine(g, prog, num_shards=1,
-                   options=EngineOptions(block_size=8192))
+    eng = plug.Middleware(g, prog, num_shards=1,
+                          options=plug.PlugOptions(block_size=8192))
     t0 = time.perf_counter()
     res = eng.run(max_iterations=5)
     dt = time.perf_counter() - t0

@@ -14,27 +14,27 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import DATASETS, save
-from repro.core.engine import EngineOptions, GXEngine
+from repro import plug
 from repro.graph.algorithms import label_prop, pagerank, sssp_bf
 
 
-def _daemon_time(eng: GXEngine, iterations: int) -> float:
+def _daemon_time(mw: plug.Middleware, iterations: int) -> float:
     """Pure daemon compute: the jitted block program on this shard's
-    blocks, outside the engine's control plane."""
-    prog = eng.program
-    state, aux = prog.init(eng.graph)
+    blocks, outside the middleware's control plane."""
+    prog = mw.program
+    state, aux = prog.init(mw.graph)
     state_dev, aux_dev = jnp.asarray(state), jnp.asarray(aux)
     total = 0.0
-    for bs in eng.blocksets:
+    for bs in mw.blocksets:
         arrs = (jnp.asarray(bs.vids), jnp.asarray(bs.lsrc),
                 jnp.asarray(bs.ldst), jnp.asarray(bs.weights),
                 jnp.asarray(bs.emask))
         # warm
-        p, c = eng._block_fn(state_dev, aux_dev, *arrs)
+        p, c = mw.daemon.block_fn(state_dev, aux_dev, *arrs)
         p.block_until_ready()
         t0 = time.perf_counter()
         for _ in range(iterations):
-            p, c = eng._block_fn(state_dev, aux_dev, *arrs)
+            p, c = mw.daemon.block_fn(state_dev, aux_dev, *arrs)
         p.block_until_ready()
         total += time.perf_counter() - t0
     return total
@@ -49,8 +49,8 @@ def run(shard_counts=(1, 2, 4, 8, 16)) -> dict:
         rows = {}
         for ns in shard_counts:
             prog = algf(g)
-            eng = GXEngine(g, prog, num_shards=ns,
-                           options=EngineOptions(block_size=8192))
+            eng = plug.Middleware(g, prog, num_shards=ns,
+                                  options=plug.PlugOptions(block_size=8192))
             t0 = time.perf_counter()
             res = eng.run(max_iterations=iters)
             total = time.perf_counter() - t0

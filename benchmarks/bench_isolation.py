@@ -14,7 +14,7 @@ import time
 import jax
 
 from benchmarks.common import save
-from repro.core.engine import EngineOptions, GXEngine
+from repro import plug
 from repro.graph import generate
 from repro.graph.algorithms import sssp_bf
 
@@ -23,18 +23,19 @@ def run(iterations: int = 11) -> dict:
     g = generate.rmat(5_000, 50_000, seed=2)
     prog = sssp_bf(g)
 
-    # compile-once: one engine, persistent jitted daemon
-    eng = GXEngine(g, prog, options=EngineOptions(block_size=4096))
+    # compile-once: one middleware, persistent jitted daemon
+    eng = plug.Middleware(g, prog, options=plug.PlugOptions(block_size=4096))
     t0 = time.perf_counter()
     eng.run(max_iterations=iterations)
     reuse = time.perf_counter() - t0
 
-    # re-init per iteration: fresh engine + cleared XLA caches each step —
-    # the daemon (compiled program) is torn down and rebuilt every time
+    # re-init per iteration: fresh middleware + cleared XLA caches each
+    # step — the daemon (compiled program) is torn down and rebuilt
     t0 = time.perf_counter()
     for _ in range(iterations):
         jax.clear_caches()
-        eng2 = GXEngine(g, prog, options=EngineOptions(block_size=4096))
+        eng2 = plug.Middleware(g, prog,
+                               options=plug.PlugOptions(block_size=4096))
         eng2.run(max_iterations=1)
     reinit = time.perf_counter() - t0
 

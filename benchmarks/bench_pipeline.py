@@ -16,8 +16,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import DATASETS, save, timeit
+from repro import plug
 from repro.core import pipeline as pl
-from repro.core.engine import EngineOptions, GXEngine
 from repro.graph.algorithms import sssp_bf
 
 
@@ -26,21 +26,20 @@ def run(sweep=(4, 8, 16, 32, 64, 128)) -> dict:
     prog = sssp_bf(g)
     e = g.num_edges
 
-    def time_with(s_blocks: int, execution: str) -> float:
+    def time_with(s_blocks: int, daemon: str) -> float:
         b = max(64, e // s_blocks)
-        eng = GXEngine(g, prog, num_shards=1,
-                       options=EngineOptions(execution=execution,
-                                             block_size=b))
-        return timeit(lambda: eng.run(max_iterations=3), repeat=1, warmup=0)
+        mw = plug.Middleware(g, prog, daemon=daemon, num_shards=1,
+                             options=plug.PlugOptions(block_size=b))
+        return timeit(lambda: mw.run(max_iterations=3), repeat=1, warmup=0)
 
     # --- calibrate (k1,k2,k3,a) from per-stage timings ---------------------
     import time as _t
     samples = []
     for b in (1024, 4096, 16384):
-        eng = GXEngine(g, prog, num_shards=1,
-                       options=EngineOptions(execution="blocked", block_size=b))
+        mw = plug.Middleware(g, prog, daemon="blocked", num_shards=1,
+                             options=plug.PlugOptions(block_size=b))
         stamps = {"n": 0.0, "c": 0.0, "u": 0.0, "count": 0}
-        bs = eng.blocksets[0]
+        bs = mw.blocksets[0]
         state, aux = prog.init(g)
         import jax.numpy as jnp
         state_dev, aux_dev = jnp.asarray(state), jnp.asarray(aux)
@@ -49,7 +48,7 @@ def run(sweep=(4, 8, 16, 32, 64, 128)) -> dict:
             arrs = tuple(jnp.asarray(a[i:i + 1]) for a in
                          (bs.vids, bs.lsrc, bs.ldst, bs.weights, bs.emask))
             t1 = _t.perf_counter()
-            partial, counts = eng._block_fn(state_dev, aux_dev, *arrs)
+            partial, counts = mw.daemon.block_fn(state_dev, aux_dev, *arrs)
             partial.block_until_ready()
             t2 = _t.perf_counter()
             _ = np.asarray(partial)

@@ -12,7 +12,7 @@ from __future__ import annotations
 import time
 
 from benchmarks.common import DATASETS, save
-from repro.core.engine import EngineOptions, GXEngine
+from repro import plug
 from repro.graph.algorithms import label_prop, pagerank, sssp_bf
 
 
@@ -25,8 +25,8 @@ def run(shard_counts=(1, 2, 4, 8)) -> dict:
         rows = {}
         for ns in shard_counts:
             prog = algf(g)
-            eng = GXEngine(g, prog, num_shards=ns,
-                           options=EngineOptions(block_size=4096))
+            eng = plug.Middleware(g, prog, num_shards=ns,
+                                  options=plug.PlugOptions(block_size=4096))
             t0 = time.perf_counter()
             res = eng.run(max_iterations=iters)
             total = time.perf_counter() - t0

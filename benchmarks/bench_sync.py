@@ -8,7 +8,7 @@
 from __future__ import annotations
 
 from benchmarks.common import DATASETS, save
-from repro.core.engine import EngineOptions, GXEngine
+from repro import plug
 from repro.graph.algorithms import sssp_bf
 
 
@@ -17,8 +17,8 @@ def run() -> dict:
     for ds in ("orkut-mini", "clustered-mini", "uniform-mini", "road-mini"):
         g = DATASETS[ds]()
         prog = sssp_bf(g)
-        eng = GXEngine(g, prog, num_shards=4,
-                       options=EngineOptions(block_size=4096))
+        eng = plug.Middleware(g, prog, num_shards=4,
+                              options=plug.PlugOptions(block_size=4096))
         res = eng.run(max_iterations=60)
         st = res.stats
         out[ds] = {

@@ -14,8 +14,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np  # noqa: E402
 
+from repro import plug  # noqa: E402
 from repro.core import balance  # noqa: E402
-from repro.core.engine import EngineOptions, GXEngine, run_reference  # noqa: E402
 from repro.graph import generate  # noqa: E402
 from repro.graph.algorithms import label_prop, sssp_bf, wcc  # noqa: E402
 from repro.graph.partition import partition_contiguous  # noqa: E402
@@ -40,10 +40,10 @@ def main():
         gg = g.with_reverse_edges() if name == "wcc" else g
         pp = (partition_contiguous(gg, 2, fractions=fracs)
               if name == "wcc" else parts)
-        eng = GXEngine(gg, prog, partitions=pp,
-                       options=EngineOptions(block_size="auto"))
+        eng = plug.Middleware(gg, prog, partitions=pp,
+                              options=plug.PlugOptions(block_size="auto"))
         res = eng.run()
-        ref, _ = run_reference(gg, prog)
+        ref, _ = plug.run_reference(gg, prog)
         ok = np.allclose(np.where(np.isfinite(res.state), res.state, 0),
                          np.where(np.isfinite(ref), ref, 0), atol=1e-4)
         print(f"  {name:10s} iters={res.iterations:3d} correct={ok} "

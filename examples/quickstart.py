@@ -1,8 +1,9 @@
 """Quickstart: the GX-Plug middleware in 40 lines.
 
-Runs PageRank and multi-source SSSP through the daemon-agent engine with
-every optimization on (pipeline blocks, sync caching/skipping, lazy
-upload), and verifies against the pure-jnp reference.
+``repro.plug`` composes the engine from three pluggable seams — an
+accelerator *daemon*, a distributed *upper system*, and a *computation
+model* — and this script exercises two compositions of them on PageRank
+and multi-source SSSP, verifying against the pure-jnp reference.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,7 +14,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np  # noqa: E402
 
-from repro.core.engine import EngineOptions, GXEngine, run_reference  # noqa: E402
+from repro import plug  # noqa: E402
 from repro.graph import generate  # noqa: E402
 from repro.graph.algorithms import pagerank, sssp_bf  # noqa: E402
 
@@ -23,23 +24,29 @@ def main():
     g = generate.rmat(num_vertices=10_000, num_edges=100_000, seed=0)
     print(f"graph: |V|={g.num_vertices:,} |E|={g.num_edges:,}")
 
-    for name, make in (("pagerank", pagerank), ("sssp-bf(4src)", sssp_bf)):
+    cells = (
+        ("pagerank", pagerank, "host", "bsp"),
+        ("sssp-bf(4src)", sssp_bf, "mesh", "gas"),  # dist-layer merge
+    )
+    for name, make, upper, model in cells:
         prog = make(g)
-        engine = GXEngine(
-            g, prog, num_shards=4,
-            options=EngineOptions(
-                model="bsp",              # or "gas" (PowerGraph ordering)
-                execution="vectorized",   # the accelerator path
-                block_size="auto",        # Lemma-1 optimal edge blocks
+        mw = plug.Middleware(
+            g, prog,
+            daemon="vectorized",     # or "pallas", "blocked", "pipelined"
+            upper=upper,             # "host" NumPy merge | "mesh" shard_map
+            model=model,             # "bsp" | "gas" (PowerGraph ordering)
+            num_shards=4,
+            options=plug.PlugOptions(
+                block_size="auto",   # Lemma-1 optimal edge blocks
                 sync_caching=True,
                 sync_skipping=True,
             ))
-        res = engine.run(max_iterations=50)
-        ref, _ = run_reference(g, prog, max_iterations=50)
+        res = mw.run(max_iterations=50)
+        ref, _ = plug.run_reference(g, prog, max_iterations=50)
         ok = np.allclose(np.where(np.isfinite(res.state), res.state, 0),
                          np.where(np.isfinite(ref), ref, 0), atol=1e-4)
         st = res.stats
-        print(f"{name:14s} iters={res.iterations:3d} "
+        print(f"{name:14s} [{upper}/{model}] iters={res.iterations:3d} "
               f"wall={res.wall_time:.2f}s correct={ok} "
               f"sync-skipped={st.rounds_skipped}/{st.rounds_total} "
               f"sync-volume-saved={1 - st.lazy_bytes / max(st.dense_bytes, 1):.0%}")

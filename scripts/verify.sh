@@ -1,11 +1,24 @@
 #!/usr/bin/env bash
 # Tier-1 verify (ROADMAP.md): the full test suite with src/ on PYTHONPATH.
 # Extra args pass through to pytest, e.g. scripts/verify.sh -k sharding
+#
+# Tier-2 (scripts/verify.sh --tier2): one production dry-run slice
+# (1 arch × 1 shape × both meshes, compiled on 512 fake devices) plus the
+# acceleration benchmark on the repro.plug API, which records the
+# BENCH_plug.json baseline under results/benchmarks/.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-# The known pre-existing red (ROADMAP "Open items") is deselected so -x can
-# reach the 8 modules sorted after it; remove the line once it is fixed.
-exec python -m pytest -x -q \
-    --deselect tests/test_hlo_analysis.py::test_live_scan_flops_match_unrolled \
-    "$@"
+
+if [[ "${1:-}" == "--tier2" ]]; then
+    shift
+    echo "== tier-2: dry-run slice (stablelm-1.6b × train_4k × both meshes) =="
+    python -m repro.launch.dryrun --arch stablelm-1.6b --shape train_4k --no-hlo
+    python -m repro.launch.dryrun --arch stablelm-1.6b --shape train_4k --multi-pod --no-hlo
+    echo "== tier-2: plug acceleration baseline (BENCH_plug.json) =="
+    python -m benchmarks.bench_accel --quick
+    echo "tier-2 OK"
+    exit 0
+fi
+
+exec python -m pytest -x -q "$@"

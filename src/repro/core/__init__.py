@@ -1,3 +1,4 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+# Agent-side mechanisms of the middleware: blocks, pipeline shuffle,
+# sync caching/skipping, balancing lemmas, the vertex-program template,
+# and the deprecated GXEngine shim. The public middleware API (protocol
+# seams + drive loop) lives in the sibling package `repro.plug`.

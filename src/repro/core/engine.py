@@ -1,49 +1,56 @@
-"""The GX-Plug engine: daemon-agent iteration runtime (paper Sec. II).
+"""Deprecated flag-based engine surface — a shim over ``repro.plug``.
 
-Roles in this JAX adaptation (DESIGN.md §2):
+``GXEngine`` was the original monolith: the daemon backend was a
+``use_pallas`` bool, the execution strategy a string switch, and the
+upper system a hard-coded host merge.  The middleware now lives in
+``repro.plug`` (DESIGN.md §2–§3), composed from three protocols —
+Daemon / UpperSystem / ComputationModel — and this module only maps the
+legacy flags onto those components:
 
-* **daemon**  = the jit-compiled block program (``_make_block_fn`` /
-  ``kernels.edge_block``): fixed-shape, compiled once, executed per block.
-* **agent**   = per-shard host state: vertex table replica, LRU boundary
-  cache, block sets, byte accounting.
-* **upper system** = the global merge across shards (the collective round),
-  plus partitioning (graph/partition.py).
+====================================  ===================================
+legacy ``EngineOptions``              ``repro.plug`` component
+====================================  ===================================
+``execution="naive"``                 ``daemon="naive"``
+``execution="blocked"``               ``daemon="blocked"``
+``execution="pipelined"``             ``daemon="pipelined"``
+``execution="vectorized"`` (default)  ``daemon="vectorized"``
+``use_pallas=True``                   ``kernel="pallas"`` on the daemon
+``model="bsp"|"gas"``                 ``model="bsp"|"gas"``
+(implicit)                            ``upper="host"``
+====================================  ===================================
 
-Execution modes:
-  * ``naive``      — per-edge Python loop; the "upper system without
-                     accelerator" baseline of Fig. 8.
-  * ``blocked``    — sequential Download→Compute→Upload per block (the
-                     paper's 5-step flow collapsed to 3; no pipeline).
-  * ``pipelined``  — 3-thread pipeline shuffle with rotating buffers
-                     (Sec. III-A), per-stage timing collected.
-  * ``vectorized`` — all (active) blocks in one fused jit call; this is the
-                     beyond-paper optimized path (XLA fuses gather + gen +
-                     block segment-reduce + combine).
-
-Computation models: ``bsp`` (Gen→Merge→Apply) and ``gas``
-(Merge→Apply→Gen); identical trajectories, per the paper's Sec. IV-B2.
+New code should construct ``plug.Middleware`` directly; constructing
+``GXEngine`` emits a ``DeprecationWarning`` once per process.
+``run_reference`` is re-exported from ``repro.plug.reference`` unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-import time
+import warnings
 from typing import Sequence
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import pipeline as pl
-from repro.core.blocks import BlockSet, build_blocks
-from repro.core.sync import LRUVertexCache, SyncStats, can_skip_sync, lazy_exchange_plan
 from repro.core.template import VertexProgram
 from repro.graph.structure import EdgePartition, Graph
 from repro.graph.partition import partition_contiguous  # noqa: F401  (re-export)
+from repro.plug import Middleware, PlugOptions, Result, get_daemon
+from repro.plug.reference import run_reference  # noqa: F401  (re-export)
+
+# Legacy name for the result dataclass (same object).
+EngineResult = Result
+
+# legacy execution flag → plug daemon registry name
+_EXECUTION_DAEMONS = {
+    "naive": "naive",
+    "blocked": "blocked",
+    "pipelined": "pipelined",
+    "vectorized": "vectorized",
+}
 
 
 @dataclasses.dataclass
 class EngineOptions:
+    """Legacy flag surface (deprecated — see module docstring)."""
+
     model: str = "bsp"  # "bsp" | "gas"
     execution: str = "vectorized"  # naive | blocked | pipelined | vectorized
     block_size: int | str = "auto"  # edges per block; "auto" → Lemma 1
@@ -59,23 +66,40 @@ class EngineOptions:
     k3: float = 2e-8
     a: float = 2e-4
 
+    def to_plug(self) -> PlugOptions:
+        return PlugOptions(
+            block_size=self.block_size,
+            sync_caching=self.sync_caching,
+            sync_skipping=self.sync_skipping,
+            cache_capacity=self.cache_capacity,
+            frontier_block_skipping=self.frontier_block_skipping,
+            k1=self.k1, k2=self.k2, k3=self.k3, a=self.a,
+        )
 
-@dataclasses.dataclass
-class EngineResult:
-    state: np.ndarray  # (N, K) final vertex state
-    iterations: int
-    converged: bool
-    stats: SyncStats
-    wall_time: float
-    per_iteration: list[dict]
-
-
-def _identity_for(monoid, shape, dtype=jnp.float32):
-    return jnp.full(shape, monoid.identity, dtype=dtype)
+    def to_daemon(self):
+        """Resolves the (execution, use_pallas) flag pair to a daemon."""
+        try:
+            name = _EXECUTION_DAEMONS[self.execution]
+        except KeyError:
+            raise ValueError(
+                f"unknown execution mode {self.execution!r}; expected one "
+                f"of {tuple(_EXECUTION_DAEMONS)}") from None
+        if name == "naive":
+            return get_daemon(name)
+        kernel = "pallas" if self.use_pallas else "reference"
+        return get_daemon(name, kernel=kernel)
 
 
 class GXEngine:
-    """Drives a VertexProgram over edge partitions."""
+    """Deprecated: use ``repro.plug.Middleware``.
+
+    Thin delegation shim — translates ``EngineOptions`` flags into plug
+    components and forwards everything else.  Attributes the benchmarks
+    historically reached into (``blocksets``, ``_block_fn``, ``stats``)
+    are preserved as delegating properties.
+    """
+
+    _warned = False  # DeprecationWarning emitted once per process
 
     def __init__(
         self,
@@ -85,416 +109,59 @@ class GXEngine:
         num_shards: int = 1,
         options: EngineOptions | None = None,
     ):
-        self.graph = graph
-        self.program = program
+        if not GXEngine._warned:
+            warnings.warn(
+                "GXEngine is deprecated; construct repro.plug.Middleware "
+                "(daemon=..., upper=..., model=...) instead",
+                DeprecationWarning, stacklevel=2)
+            GXEngine._warned = True
         self.options = options or EngineOptions()
-        if partitions is None:
-            partitions = partition_contiguous(graph, num_shards)
-        self.partitions = list(partitions)
-        self.num_shards = len(self.partitions)
-        self.n = graph.num_vertices
-        self.k = program.state_width
-
-        b = self._resolve_block_size()
-        self.block_size = b
-        self.blocksets = [build_blocks(p, b) for p in self.partitions]
-        # One vertex-block width for all shards → one compiled daemon program.
-        vb = max(bs.vblock_size for bs in self.blocksets)
-        self.blocksets = [build_blocks(p, b, vblock_size=vb) for p in self.partitions]
-        self.vblock_size = vb
-
-        self._block_fn = _make_block_fn(program, use_pallas=self.options.use_pallas)
-        self._combine_fn = _make_combine_fn(program, self.n)
-        self._apply_fn = _make_apply_fn(program)
-        self.stats = SyncStats()
-        self._caches = [
-            LRUVertexCache(self.options.cache_capacity) for _ in range(self.num_shards)
-        ]
-
-    # -- setup ------------------------------------------------------------
-    def _resolve_block_size(self) -> int:
-        o = self.options
-        if o.block_size == "auto":
-            d = max(1, max(p.num_edges for p in self.partitions))
-            best_b, _ = pl.optimal_integer_blocks(d, o.k1, o.k2, o.k3, o.a)
-            return int(min(max(best_b, 64), 1 << 16))
-        return int(o.block_size)
-
-    # -- iteration pieces ---------------------------------------------------
-    def _shard_aggregate(self, j: int, state_j: np.ndarray, aux: np.ndarray,
-                         active_j: np.ndarray | None, record: dict):
-        """Gen + per-block Merge for shard j → (N,K) aggregate, (N,) counts."""
-        bs = self.blocksets[j]
-        o = self.options
-        if self.program.frontier_driven and o.frontier_block_skipping and active_j is not None:
-            blk_active = np.any(active_j[bs.gsrc] & bs.emask, axis=1)
-            sel = np.nonzero(blk_active)[0]
-        else:
-            sel = np.arange(bs.num_blocks)
-        record["blocks_total"] = record.get("blocks_total", 0) + bs.num_blocks
-        record["blocks_run"] = record.get("blocks_run", 0) + int(sel.size)
-        if sel.size == 0:
-            agg = np.full((self.n, self.k), self.program.monoid.identity, np.float32)
-            return agg, np.zeros(self.n, np.int32), np.empty(0, np.int64)
-
-        # LRU cache accounting for boundary reads (Sec. III-B2).
-        read_ids = np.unique(bs.gsrc[sel][bs.emask[sel]])
-        boundary_reads = read_ids[self.partitions[j].boundary_mask[read_ids]]
-        rowbytes = 4 * self.k + 8
-        if o.sync_caching:
-            cache = self._caches[j]
-            hit = cache.lookup(boundary_reads.astype(np.int64))
-            cache.insert(boundary_reads[~hit].astype(np.int64))
-            self.stats.cache_hits += int(hit.sum())
-            self.stats.cache_misses += int((~hit).sum())
-            self.stats.download_bytes_cache += int((~hit).sum()) * rowbytes
-        self.stats.download_bytes_nocache += int(boundary_reads.size) * rowbytes
-
-        if o.execution == "vectorized":
-            sel_p = _pad_pow2(sel, bs.num_blocks)
-            arrs = _gather_blocks(bs, sel_p)
-            partial, counts = self._block_fn(jnp.asarray(state_j), jnp.asarray(aux), *arrs)
-            agg, cnt = self._combine_fn(partial, counts, arrs[0])
-            agg, cnt = np.asarray(agg), np.asarray(cnt)
-        else:
-            agg, cnt = self._loop_blocks(j, state_j, aux, sel, record)
-        return agg, cnt, read_ids
-
-    def _loop_blocks(self, j, state_j, aux, sel, record):
-        """blocked / pipelined execution over individual blocks."""
-        bs = self.blocksets[j]
-        o = self.options
-        monoid = self.program.monoid
-        agg = np.full((self.n, self.k), monoid.identity, np.float32)
-        cnt = np.zeros(self.n, np.int64)
-        state_dev = jnp.asarray(state_j)
-        aux_dev = jnp.asarray(aux)
-
-        def download(i: int, slot: dict):
-            b = int(sel[i])
-            slot["arrs"] = tuple(
-                jnp.asarray(a[b : b + 1])
-                for a in (bs.vids, bs.lsrc, bs.ldst, bs.weights, bs.emask)
-            )
-            slot["vids"] = bs.vids[b]
-
-        def compute(i: int, slot: dict):
-            partial, counts = self._block_fn(state_dev, aux_dev, *slot["arrs"])
-            slot["partial"], slot["counts"] = partial, counts  # async refs
-
-        def upload(i: int, slot: dict):
-            partial = np.asarray(slot["partial"])[0]
-            counts = np.asarray(slot["counts"])[0]
-            vids = slot["vids"]
-            if monoid.name == "sum":
-                np.add.at(agg, vids, partial)
-            elif monoid.name == "min":
-                np.minimum.at(agg, vids, partial)
-            else:
-                np.maximum.at(agg, vids, partial)
-            np.add.at(cnt, vids, counts)
-
-        if o.execution == "pipelined":
-            res = pl.PipelinedExecutor(download, compute, upload).run(sel.size)
-            record.setdefault("pipeline", []).append(res)
-        else:
-            res = pl.run_sequential(download, compute, upload, sel.size)
-            record.setdefault("sequential", []).append(res)
-        return agg, cnt.astype(np.int32)
-
-    # -- the drive loop -----------------------------------------------------
-    def run(self, max_iterations: int | None = None) -> EngineResult:
-        if self.options.execution == "naive":
-            return self._run_naive(max_iterations)
-        prog = self.program
-        o = self.options
-        max_it = max_iterations or prog.max_iterations
-        state0, aux = prog.init(self.graph)
-        states = [state0.copy() for _ in range(self.num_shards)]
-        actives = [np.ones(self.n, dtype=bool) for _ in range(self.num_shards)]
-        skip_ok = o.sync_skipping and prog.supports_sync_skipping()
-        per_iter: list[dict] = []
-        rowbytes = 4 * self.k + 8
-        t0 = time.perf_counter()
-        it = 0
-        converged = False
-
-        # GAS runs the initial scatter (Gen) before the loop: pending
-        # aggregates consumed by Merge→Apply→Gen each iteration.
-        pending = None
-        if o.model == "gas":
-            pending = [
-                self._shard_aggregate(j, states[j], aux, actives[j], {})
-                for j in range(self.num_shards)
-            ]
-
-        for it in range(1, max_it + 1):
-            rec: dict = {"iteration": it}
-            for c in self._caches:
-                c.tick()
-            if o.model == "bsp":
-                results = [
-                    self._shard_aggregate(j, states[j], aux, actives[j], rec)
-                    for j in range(self.num_shards)
-                ]
-            else:
-                results = pending
-
-            aggs = [r[0] for r in results]
-            cnts = [r[1] for r in results]
-
-            # Local candidate apply (needed for skip detection).
-            new_states, new_actives, updated_ids = [], [], []
-            for j in range(self.num_shards):
-                ns, act = self._apply_fn(
-                    jnp.asarray(states[j]), jnp.asarray(aggs[j]),
-                    jnp.asarray(cnts[j] > 0), jnp.asarray(aux), it)
-                ns, act = np.asarray(ns), np.asarray(act)
-                new_states.append(ns)
-                new_actives.append(act)
-                updated_ids.append(np.nonzero(act)[0])
-
-            boundary_masks = [p.boundary_mask for p in self.partitions]
-            skipped = skip_ok and self.num_shards > 1 and can_skip_sync(
-                updated_ids, boundary_masks)
-            self.stats.rounds_total += 1
-            rec["skipped"] = bool(skipped)
-
-            if skipped:
-                self.stats.rounds_skipped += 1
-                states = new_states
-                actives = new_actives
-            else:
-                # Global merge ("upper system synchronization").
-                states, actives = self._global_sync(
-                    states, new_states, new_actives, aggs, cnts, aux, it,
-                    updated_ids, boundary_masks, rowbytes, rec)
-
-            rec["active"] = int(np.max([a.sum() for a in actives]))
-            per_iter.append(rec)
-            if all(a.sum() == 0 for a in actives):
-                converged = True
-                break
-            if o.model == "gas":
-                pending = [
-                    self._shard_aggregate(j, states[j], aux, actives[j], rec)
-                    for j in range(self.num_shards)
-                ]
-
-        final = self._resolve_state(states)
-        return EngineResult(
-            state=final,
-            iterations=it,
-            converged=converged,
-            stats=self.stats,
-            wall_time=time.perf_counter() - t0,
-            per_iteration=per_iter,
+        self._mw = Middleware(
+            graph, program,
+            daemon=self.options.to_daemon(),
+            upper="host",
+            model=self.options.model,
+            partitions=list(partitions) if partitions is not None else None,
+            num_shards=num_shards,
+            options=self.options.to_plug(),
         )
 
-    def _global_sync(self, states, new_states, new_actives, aggs, cnts, aux,
-                     it, updated_ids, boundary_masks, rowbytes, rec):
-        monoid = self.program.monoid
-        o = self.options
-        # Byte accounting: dense exchange vs lazy upload (Alg. 3).
-        self.stats.dense_bytes += self.num_shards * self.n * self.k * 4
-        queried = []
-        for j in range(self.num_shards):
-            reads = np.unique(self.blocksets[j].gsrc[self.blocksets[j].emask])
-            queried.append(reads[boundary_masks[j][reads]].astype(np.int64))
-        upd_boundary = [
-            u[boundary_masks[j][u]].astype(np.int64) for j, u in enumerate(updated_ids)
-        ]
-        gqq, uploads = lazy_exchange_plan(upd_boundary, queried)
-        self.stats.lazy_bytes += int(sum(u.size for u in uploads)) * rowbytes
-        self.stats.lazy_bytes += int(gqq.size) * 8  # query-queue broadcast
-        if o.sync_caching:
-            changed = np.unique(np.concatenate([u for u in uploads] or
-                                               [np.empty(0, np.int64)]))
-            for c in self._caches:
-                c.invalidate(changed)
+    def run(self, max_iterations: int | None = None) -> Result:
+        return self._mw.run(max_iterations)
 
-        if monoid.idempotent:
-            # States may have diverged across earlier skipped rounds; the
-            # idempotent monoid combine over replicas restores consistency.
-            base = functools.reduce(monoid.combine, [jnp.asarray(s) for s in states])
-            agg = functools.reduce(monoid.combine, [jnp.asarray(a) for a in aggs])
-        else:
-            base = jnp.asarray(states[0])
-            agg = functools.reduce(lambda x, y: x + y, [jnp.asarray(a) for a in aggs])
-        cnt = np.sum(np.stack(cnts), axis=0)
-        ns, act = self._apply_fn(base, agg, jnp.asarray(cnt > 0), jnp.asarray(aux), it)
-        ns, act = np.asarray(ns), np.asarray(act)
-        return [ns.copy() for _ in range(self.num_shards)], [
-            act.copy() for _ in range(self.num_shards)
-        ]
+    # -- delegation (legacy attribute surface) ------------------------------
+    @property
+    def graph(self):
+        return self._mw.graph
 
-    def _resolve_state(self, states):
-        if self.num_shards == 1:
-            return states[0]
-        if self.program.monoid.idempotent:
-            out = states[0]
-            for s in states[1:]:
-                out = np.asarray(self.program.monoid.combine(out, s))
-            return out
-        return states[0]
+    @property
+    def program(self):
+        return self._mw.program
 
-    # -- naive baseline (Fig. 8's "no accelerator") -------------------------
-    def _run_naive(self, max_iterations: int | None) -> EngineResult:
-        prog = self.program
-        g = self.graph
-        max_it = max_iterations or prog.max_iterations
-        state, aux = prog.init(g)
-        state = state.copy()
-        identity = prog.monoid.identity
-        t0 = time.perf_counter()
-        converged = False
-        it = 0
-        w = g.weights if g.weights is not None else np.ones(g.num_edges, np.float32)
-        for it in range(1, max_it + 1):
-            agg = np.full((self.n, self.k), identity, np.float32)
-            cnt = np.zeros(self.n, np.int64)
-            for e in range(g.num_edges):  # deliberate per-edge host loop
-                s, d = g.src[e], g.dst[e]
-                msg = np.asarray(prog.msg_gen(
-                    state[s : s + 1], state[d : d + 1],
-                    w[e : e + 1, None], aux[s : s + 1]))[0]
-                if prog.monoid.name == "sum":
-                    agg[d] += msg
-                elif prog.monoid.name == "min":
-                    agg[d] = np.minimum(agg[d], msg)
-                else:
-                    agg[d] = np.maximum(agg[d], msg)
-                cnt[d] += 1
-            ns, act = prog.msg_apply(
-                jnp.asarray(state), jnp.asarray(agg), jnp.asarray(cnt > 0),
-                jnp.asarray(aux), it)
-            state, act = np.asarray(ns), np.asarray(act)
-            if not act.any():
-                converged = True
-                break
-        return EngineResult(state, it, converged, self.stats,
-                            time.perf_counter() - t0, [])
+    @property
+    def partitions(self):
+        return self._mw.partitions
 
+    @property
+    def num_shards(self):
+        return self._mw.num_shards
 
-# --------------------------------------------------------------------------
-# jitted daemon programs
-# --------------------------------------------------------------------------
-def _pad_pow2(sel: np.ndarray, nb_total: int) -> np.ndarray:
-    """Pads selected block ids to the next power of two (bounded recompiles);
-    padding re-uses block 0 with a kill-switch applied via emask in gather."""
-    n = int(sel.size)
-    target = 1 << max(0, (n - 1).bit_length())
-    if target == n:
-        return sel
-    return np.concatenate([sel, np.full(target - n, -1, dtype=sel.dtype)])
+    @property
+    def blocksets(self):
+        return self._mw.blocksets
 
+    @property
+    def block_size(self):
+        return self._mw.block_size
 
-def _gather_blocks(bs: BlockSet, sel: np.ndarray):
-    """Stacks the selected blocks; sel == -1 → dead block (emask all False)."""
-    live = sel >= 0
-    idx = np.where(live, sel, 0)
-    vids = bs.vids[idx]
-    lsrc = bs.lsrc[idx]
-    ldst = bs.ldst[idx]
-    w = bs.weights[idx]
-    emask = bs.emask[idx] & live[:, None]
-    return (jnp.asarray(vids), jnp.asarray(lsrc), jnp.asarray(ldst),
-            jnp.asarray(w), jnp.asarray(emask))
+    @property
+    def vblock_size(self):
+        return self._mw.vblock_size
 
+    @property
+    def stats(self):
+        return self._mw.stats
 
-def _make_block_fn(program: VertexProgram, *, use_pallas: bool):
-    """The daemon: per-block Gen + block-local Merge. Fixed shapes in, fixed
-    shapes out; compiled once per (nb, VB, B) bucket."""
-    monoid = program.monoid
-    k = program.state_width
-
-    if use_pallas:
-        from repro.kernels import ops as kops
-
-        @jax.jit
-        def block_fn(state, aux, vids, lsrc, ldst, w, emask):
-            return kops.edge_block_aggregate(
-                state, aux, vids, lsrc, ldst, w, emask,
-                program=program)
-
-        return block_fn
-
-    @jax.jit
-    def block_fn(state, aux, vids, lsrc, ldst, w, emask):
-        nb, vb = vids.shape
-        b = lsrc.shape[1]
-        vstate = state[vids]  # (nb, VB, K) gather
-        vaux = aux[vids]
-        s = jnp.take_along_axis(vstate, lsrc[..., None], axis=1)
-        d = jnp.take_along_axis(vstate, ldst[..., None], axis=1)
-        sa = jnp.take_along_axis(vaux, lsrc[..., None], axis=1)
-        msgs = program.msg_gen(
-            s.reshape(nb * b, k), d.reshape(nb * b, k),
-            w.reshape(nb * b, 1), sa.reshape(nb * b, -1)).reshape(nb, b, k)
-        msgs = jnp.where(emask[..., None], msgs, monoid.identity)
-        seg = (ldst + jnp.arange(nb, dtype=ldst.dtype)[:, None] * vb).reshape(-1)
-        partial = monoid.segment_reduce(msgs.reshape(nb * b, k), seg, nb * vb)
-        partial = partial.reshape(nb, vb, k)
-        counts = jax.ops.segment_sum(
-            emask.reshape(-1).astype(jnp.int32), seg, nb * vb).reshape(nb, vb)
-        return partial, counts
-
-    return block_fn
-
-
-def _make_combine_fn(program: VertexProgram, n: int):
-    monoid = program.monoid
-
-    @jax.jit
-    def combine(partial, counts, vids):
-        nbvb, k = partial.shape[0] * partial.shape[1], partial.shape[2]
-        flat_ids = vids.reshape(-1)
-        agg = monoid.segment_reduce(partial.reshape(nbvb, k), flat_ids, n)
-        cnt = jax.ops.segment_sum(counts.reshape(-1), flat_ids, n)
-        return agg, cnt
-
-    return combine
-
-
-def _make_apply_fn(program: VertexProgram):
-    @jax.jit
-    def apply_fn(state, merged, has_msg, aux, it):
-        # Vertices with no message keep identity-merged values; msg_apply
-        # implementations treat identity correctly (min/max) or use has_msg.
-        merged = jnp.where(has_msg[:, None], merged,
-                           jnp.full_like(merged, program.monoid.identity))
-        return program.msg_apply(state, merged, has_msg[:, None], aux, it)
-
-    return apply_fn
-
-
-# --------------------------------------------------------------------------
-# Pure-jnp full-graph reference (oracle for tests & kernels)
-# --------------------------------------------------------------------------
-def run_reference(graph: Graph, program: VertexProgram,
-                  max_iterations: int | None = None) -> tuple[np.ndarray, int]:
-    state, aux = program.init(graph)
-    state = jnp.asarray(state)
-    aux = jnp.asarray(aux)
-    src = jnp.asarray(graph.src)
-    dst = jnp.asarray(graph.dst)
-    w = jnp.asarray(graph.weights if graph.weights is not None
-                    else np.ones(graph.num_edges, np.float32))[:, None]
-    max_it = max_iterations or program.max_iterations
-    n = graph.num_vertices
-
-    @jax.jit
-    def step(state, it):
-        msgs = program.msg_gen(state[src], state[dst], w, aux[src])
-        agg = program.monoid.segment_reduce(msgs, dst, n)
-        cnt = jax.ops.segment_sum(jnp.ones_like(dst), dst, n)
-        has = (cnt > 0)[:, None]
-        agg = jnp.where(has, agg, jnp.full_like(agg, program.monoid.identity))
-        return program.msg_apply(state, agg, has, aux, it)
-
-    it = 0
-    for it in range(1, max_it + 1):
-        state, active = step(state, it)
-        if not bool(active.any()):
-            break
-    return np.asarray(state), it
+    @property
+    def _block_fn(self):
+        return getattr(self._mw.daemon, "block_fn", None)

@@ -18,8 +18,9 @@ A graph algorithm is expressed through three APIs:
 The *call order* of the three realizes different computation models
 (Sec. IV-B2): BSP runs Gen→Merge→Apply inside one superstep; GAS runs
 Merge→Apply→Gen (scatter at the end, producing messages consumed by the
-next iteration). ``repro.core.engine`` implements both orders on the same
-template, as the paper's middleware does for GraphX vs PowerGraph.
+next iteration). ``repro.plug.computation`` implements both orders as
+strategy objects over the same template, as the paper's middleware does
+for GraphX vs PowerGraph.
 
 State layout: vertex state is a dense ``(N, K)`` float32 array; messages are
 ``(E, K)``; static per-vertex features (degrees, seed labels) live in an

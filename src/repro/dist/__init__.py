@@ -1,9 +1,11 @@
 """The "upper system" half of the middleware (DESIGN.md §4).
 
 GX-Plug splits responsibilities between accelerator-side *daemons*
-(``repro.kernels``, ``repro.core.engine``) and the distributed *upper
-system* that feeds them.  This package is the upper system, organised by
-the paper's three optimization horizons:
+(``repro.kernels``, ``repro.plug.daemons``) and the distributed *upper
+system* that feeds them.  This package is the upper system of the
+training/serving half (``repro.plug.uppers.MeshUpperSystem`` is the
+graph engine's doorway into it), organised by the paper's three
+optimization horizons:
 
 * ``sharding``    — intra-iteration: logical-axis partitioning rules that
                     place every tensor dimension on a mesh axis (the

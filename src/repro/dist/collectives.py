@@ -12,11 +12,21 @@ Two implementations share the same math:
 * ``compressed_allreduce_ref`` — pure host loop over per-shard arrays, the
   oracle for tests and for reasoning about error bounds;
 * ``make_compressed_allreduce`` — a ``shard_map`` program over a mesh axis
-  that runs the quantize → psum → dequantize round on-device per shard.
+  with two wire formats:
 
-The reference psum carries dequantized values (each shard has its own
-scale, so the sum cannot stay int on a heterogeneous wire without a
-gather of scales); wire accounting uses ``collective_bytes_saved``.
+  - ``wire="int8"`` (default, the *real* wire path): every shard
+    quantizes with its local scale, the per-shard scales are
+    **all-gathered** (4 bytes each), the shared max scale re-quantizes
+    the payload, and the reduction **accumulates in int32** — one
+    dequantize at the end. The wire carries ``bits``-bit integers plus a
+    scalar scale; integer accumulation is exact, so the only error is
+    the single shared-scale rounding.
+  - ``wire="emulated"`` — the dequantize-then-psum variant kept for
+    comparison: each shard dequantizes with its own scale before the f32
+    psum (adapts to per-shard magnitude, but the wire is f32 — only the
+    *accounting* pretends int8).
+
+Wire accounting uses ``collective_bytes_saved``.
 """
 from __future__ import annotations
 
@@ -91,15 +101,47 @@ def compressed_allreduce_ref(locals_, residuals, *, bits: int = 8):
     return [mean for _ in sents], new_res
 
 
-def make_compressed_allreduce(mesh, axis_name: str, *, bits: int = 8):
+WIRE_FORMATS = ("int8", "emulated")
+
+
+def _int_wire_round(t, axis_name: str, size: int, bits: int):
+    """One shard's half of the real int wire round.
+
+    Returns ``(mean, new_residual)``: the shard's local scale is computed,
+    all scales are all-gathered (the 4-byte side channel), the payload is
+    re-quantized against the shared max scale, and the cross-shard sum is
+    accumulated **in int32** — exact integer addition — before the single
+    dequantize.  The residual is what the shared-scale grid dropped.
+    """
+    qmax = (1 << (bits - 1)) - 1
+    amax = jnp.max(jnp.abs(t.astype(jnp.float32)))
+    local_scale = jnp.maximum(amax, _EPS) / qmax
+    scales = jax.lax.all_gather(local_scale, axis_name)
+    shared_scale = jnp.max(scales)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / shared_scale),
+                 -qmax, qmax).astype(jnp.int8)
+    sent = q.astype(jnp.float32) * shared_scale  # what this shard put on the wire
+    acc = jax.lax.psum(q.astype(jnp.int32), axis_name)  # int32 accumulation
+    mean = acc.astype(jnp.float32) * shared_scale / size
+    return mean, t - sent
+
+
+def make_compressed_allreduce(mesh, axis_name: str, *, bits: int = 8,
+                              wire: str = "int8"):
     """``shard_map`` version of the EF all-reduce over one mesh axis.
 
     The returned function takes ``(tree, residual_tree)`` of arrays whose
     leading dim is sharded on ``axis_name`` and returns ``(mean_tree,
-    new_residual_tree)`` with the same shardings.  Each shard quantizes its
-    slice independently (local scale), so compression adapts to per-shard
-    magnitude — the behaviour ``compressed_allreduce_ref`` oracles.
+    new_residual_tree)`` with the same shardings.
+
+    ``wire="int8"`` runs the real integer wire path (scale all-gather →
+    shared-scale requantize → int32-accumulating reduce → one dequantize);
+    ``wire="emulated"`` keeps the historical dequantize-then-psum round
+    where each shard's local scale adapts to its own magnitude — the
+    behaviour ``compressed_allreduce_ref`` oracles.
     """
+    if wire not in WIRE_FORMATS:
+        raise ValueError(f"wire must be one of {WIRE_FORMATS}, got {wire!r}")
     size = mesh.shape[axis_name]
     spec = P(axis_name)
 
@@ -108,8 +150,12 @@ def make_compressed_allreduce(mesh, axis_name: str, *, bits: int = 8):
         leaves_r = treedef.flatten_up_to(residuals)
         means, new_res = [], []
         for x, r in zip(leaves_x, leaves_r):
-            sent, nr = _round(x, r, bits)
-            means.append(jax.lax.psum(sent, axis_name) / size)
+            if wire == "int8":
+                mean, nr = _int_wire_round(x + r, axis_name, size, bits)
+            else:
+                sent, nr = _round(x, r, bits)
+                mean = jax.lax.psum(sent, axis_name) / size
+            means.append(mean)
             new_res.append(nr)
         return treedef.unflatten(means), treedef.unflatten(new_res)
 

@@ -176,7 +176,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = hlo_analysis.xla_cost_analysis(compiled)
     hlo = compiled.as_text()
     stats = hlo_analysis.analyze(hlo, world=world)
 

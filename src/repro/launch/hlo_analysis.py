@@ -45,9 +45,29 @@ _COLLECTIVE_RE = re.compile(
     r"(?:-start)?\(")
 _GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-_DOT_RE = re.compile(r"=\s*([a-z0-9]+\[[\d,]*\])\S*\s*dot\(\s*%?([\w\.\-]+),")
+# Operands may carry inline types in full/scheduled HLO dumps
+# (``dot(f32[32,64]{1,0} %lhs, ...)``) and be bare in abbreviated ones
+# (``dot(%lhs, ...)``); the optional group absorbs the type either way.
+_OPT_TYPE = r"(?:(?:\([^)]*\)|[a-z0-9]+\[[\d,]*\])\S*\s+)?"
+_DOT_RE = re.compile(
+    r"=\s*([a-z0-9]+\[[\d,]*\])\S*\s*dot\(\s*"
+    r"(?:([a-z0-9]+\[[\d,]*\])\S*\s+)?%?([\w\.\-]+),\s*"
+    r"(?:([a-z0-9]+\[[\d,]*\])\S*\s+)?%?([\w\.\-]+)")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _CONV_RE = re.compile(r"=\s*([a-z0-9]+\[[\d,]*\])\S*\s*convolution\(")
+# XLA records the resolved trip count on the while op itself after loop
+# analysis: backend_config={"known_trip_count":{"n":"6"}} — the most
+# reliable source when present (survives fused/rewritten conditions).
+_KNOWN_TRIP_RE = re.compile(r"known_trip_count[^}]*?\"n\"\s*:\s*\"(\d+)\"")
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """Normalizes ``compiled.cost_analysis()`` across jax versions: older
+    releases return a list with one per-module dict, newer ones a dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
 
 
 def shape_bytes(type_str: str) -> int:
@@ -124,7 +144,19 @@ def while_trip_counts(comps: dict[str, Computation]) -> dict[str, int]:
     operand IS the trip count (LE/GE add one).
     """
     trips: dict[str, int] = {}
+    # Preferred source: the trip count XLA itself resolved and stamped on
+    # the while op (backend_config) — map it back to the condition name.
     for comp in comps.values():
+        for line in comp.lines:
+            mw = _WHILE_RE.search(line)
+            if mw:
+                mk = _KNOWN_TRIP_RE.search(line)
+                if mk:
+                    trips[mw.group(1)] = int(mk.group(1))
+    # Fallback: parse the condition's compare-against-constant.
+    for comp in comps.values():
+        if comp.name in trips:
+            continue
         consts = dict()
         for line in comp.lines:
             mc = _CONST_RE.search(line)
@@ -144,7 +176,12 @@ def while_trip_counts(comps: dict[str, Computation]) -> dict[str, int]:
                 continue
             bound = None
             for op in mo.group(1).split(","):
-                name = op.strip().lstrip("%")
+                toks = op.strip().split()
+                if not toks:
+                    continue
+                # full HLO prints typed operands ("s32[] %constant.31") —
+                # the instruction name is always the last token
+                name = toks[-1].lstrip("%")
                 if name in consts:
                     bound = consts[name]
                     break
@@ -166,7 +203,11 @@ def computation_multipliers(hlo: str, comps: dict[str, Computation],
             mw = _WHILE_RE.search(line)
             if mw:
                 cond, body = mw.groups()
-                trip = trips.get(cond, default_trip)
+                mk = _KNOWN_TRIP_RE.search(line)
+                if mk:
+                    trip = int(mk.group(1))
+                else:
+                    trip = trips.get(cond, default_trip)
                 edges[cname].append((body, float(trip)))
                 edges[cname].append((cond, float(trip + 1)))
                 continue
@@ -244,7 +285,7 @@ def _wire_bytes(kind: str, result_bytes: int, g: int) -> float:
 
 _OPERAND_RE = re.compile(
     r"(?:all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start)?\(\s*%?([\w\.\-]+)")
+    r"(?:-start)?\(\s*" + _OPT_TYPE + r"%?([\w\.\-]+)")
 _CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
 
 
@@ -305,10 +346,15 @@ def analyze(hlo: str, *, world: int) -> HloStats:
                 continue
             md = _DOT_RE.search(line)
             if md:
-                out_type, lhs_name = md.group(1), md.group(2)
+                out_type = md.group(1)
+                lhs_type, lhs_name = md.group(2), md.group(3)
+                rhs_type, rhs_name = md.group(4), md.group(5)
                 out_elems = shape_elems(out_type)
-                lhs_def = comp.defs.get(lhs_name, "")
-                lhs_dims = shape_dims(lhs_def)
+                # operand shapes: inline type when the dump prints one,
+                # else the operand's defining instruction
+                lhs_src = lhs_type or comp.defs.get(lhs_name, "")
+                rhs_src = rhs_type or comp.defs.get(rhs_name, "")
+                lhs_dims = shape_dims(lhs_src)
                 mk = _CONTRACT_RE.search(line)
                 contract = 1
                 if mk and lhs_dims:
@@ -316,12 +362,7 @@ def analyze(hlo: str, *, world: int) -> HloStats:
                         if idx and int(idx) < len(lhs_dims):
                             contract *= lhs_dims[int(idx)]
                 stats.dot_flops += 2.0 * out_elems * contract * m
-                # HBM traffic proxy: lhs + out (rhs shape needs the rhs def;
-                # approximate rhs ≈ lhs·out/contract² is unsafe — parse it)
-                mrhs = re.search(r"dot\(\s*%?[\w\.\-]+,\s*%?([\w\.\-]+)", line)
-                rhs_bytes = shape_bytes(comp.defs.get(
-                    mrhs.group(1), "")) if mrhs else 0
-                stats.dot_bytes += (shape_bytes(lhs_def) + rhs_bytes
+                stats.dot_bytes += (shape_bytes(lhs_src) + shape_bytes(rhs_src)
                                     + shape_bytes(out_type)) * m
                 continue
             mcv = _CONV_RE.search(line)

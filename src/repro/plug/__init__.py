@@ -1,0 +1,56 @@
+"""``repro.plug`` — the public middleware API (DESIGN.md §2–§3).
+
+GX-Plug is *middleware*: one engine that plugs different accelerator
+backends into different distributed graph systems under different
+computation models.  This package is that claim made structural — three
+protocols, registries for each, and a :class:`Middleware` composed from
+one implementation of each seam:
+
+    from repro import plug
+    from repro.graph import generate
+    from repro.graph.algorithms import pagerank
+
+    g = generate.rmat(10_000, 100_000, seed=0)
+    mw = plug.Middleware(g, pagerank(g), daemon="reference",
+                         upper="mesh", model="bsp", num_shards=4)
+    result = mw.run()
+
+Seams and shipped implementations:
+
+=================  =====================================================
+``daemon=``        ``"reference"``/``"vectorized"`` (fused jnp),
+                   ``"pallas"`` (edge-block kernel), ``"blocked"``,
+                   ``"pipelined"``, ``"naive"``
+``upper=``         ``"host"`` (NumPy merge),
+                   ``"mesh"`` (shard_map collectives over ``repro.dist``;
+                   optional ``wire="compressed"`` int8 aggregate sync)
+``model=``         ``"bsp"``, ``"gas"``
+=================  =====================================================
+
+Register your own with ``register_daemon`` / ``register_upper_system`` /
+``register_model`` — the drive loop never changes.  The legacy
+``repro.core.engine.GXEngine`` remains as a deprecation shim over this
+package.
+"""
+from repro.plug.computation import (BSP, GAS, get_model, model_names,
+                                    register_model)
+from repro.plug.daemons import (BlockedDaemon, NaiveDaemon, PipelinedDaemon,
+                                VectorizedDaemon, daemon_names, get_daemon,
+                                register_daemon)
+from repro.plug.middleware import Middleware, make_apply_fn
+from repro.plug.protocols import (ComputationModel, Daemon, PlugOptions,
+                                  Result, UpperSystem)
+from repro.plug.reference import run_reference
+from repro.plug.uppers import (HostUpperSystem, MeshUpperSystem,
+                               get_upper_system, register_upper_system,
+                               upper_system_names)
+
+__all__ = [
+    "BSP", "GAS", "BlockedDaemon", "ComputationModel", "Daemon",
+    "HostUpperSystem", "MeshUpperSystem", "Middleware", "NaiveDaemon",
+    "PipelinedDaemon", "PlugOptions", "Result", "UpperSystem",
+    "VectorizedDaemon", "daemon_names", "get_daemon", "get_model",
+    "get_upper_system", "make_apply_fn", "model_names", "register_daemon",
+    "register_model", "register_upper_system", "run_reference",
+    "upper_system_names",
+]

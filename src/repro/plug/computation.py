@@ -1,0 +1,82 @@
+"""Computation models as strategy objects (paper Sec. IV-B2).
+
+A model decides *when* the daemons run Gen relative to Merge/Apply —
+the difference between GraphX-style BSP and PowerGraph-style GAS — via
+three hooks the middleware drive loop calls:
+
+* ``prologue(gather)``   — before the loop; GAS runs its initial scatter
+  here and returns the pending aggregates, BSP returns None.
+* ``aggregates(gather, pending, record)`` — which aggregates this
+  iteration's Merge consumes: BSP gathers fresh ones, GAS consumes the
+  scatter of the previous iteration.
+* ``epilogue(gather, record)`` — after Apply on non-converged
+  iterations; GAS scatters for the next iteration.
+
+Both orderings produce identical trajectories on the same template
+(tests/test_plug.py's equivalence matrix), exactly as the paper argues.
+A new model (async, priority-ordered, delta-stepping) implements the
+same three hooks and registers with :func:`register_model` — the drive
+loop never changes.
+"""
+from __future__ import annotations
+
+
+class BSP:
+    """Bulk-synchronous: Gen → Merge → Apply inside one superstep."""
+
+    name = "bsp"
+    order = ("gen", "merge", "apply")
+
+    def prologue(self, gather):
+        return None
+
+    def aggregates(self, gather, pending, record):
+        return gather(record)
+
+    def epilogue(self, gather, record):
+        return None
+
+
+class GAS:
+    """Gather-Apply-Scatter ordering: Merge → Apply → Gen; the scatter at
+    the end of iteration *t* produces the messages iteration *t+1*
+    consumes (PowerGraph's ordering)."""
+
+    name = "gas"
+    order = ("merge", "apply", "gen")
+
+    def prologue(self, gather):
+        return gather({})
+
+    def aggregates(self, gather, pending, record):
+        return pending
+
+    def epilogue(self, gather, record):
+        return gather(record)
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+_MODELS: dict = {}
+
+
+def register_model(name: str, factory) -> None:
+    _MODELS[name] = factory
+
+
+def get_model(name: str, **kwargs):
+    try:
+        factory = _MODELS[name]
+    except KeyError:
+        raise KeyError(f"unknown computation model {name!r}; registered: "
+                       f"{sorted(_MODELS)}") from None
+    return factory(**kwargs)
+
+
+def model_names() -> tuple:
+    return tuple(sorted(_MODELS))
+
+
+register_model("bsp", BSP)
+register_model("gas", GAS)

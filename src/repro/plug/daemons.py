@@ -1,0 +1,290 @@
+"""Accelerator backends (the *daemon* role, DESIGN.md §2).
+
+Every daemon implements the same contract — ``bind(program, n)`` then
+``run_blocks(state, aux, blockset, sel, record) -> (agg, cnt)`` — and the
+middleware cannot tell them apart:
+
+* ``VectorizedDaemon``  — all selected blocks stacked into one fused jit
+  call (gather + Gen + segmented Merge + combine), active set padded to a
+  power of two to bound recompiles.  ``kernel="reference"`` lowers pure
+  jnp; ``kernel="pallas"`` routes the block program through the Pallas
+  edge-block kernel (interpret mode off-TPU).
+* ``BlockedDaemon``     — the paper's 5-step flow collapsed to 3:
+  sequential Download → Compute → Upload per block.
+* ``PipelinedDaemon``   — the 3-thread pipeline shuffle with rotating
+  buffers (Sec. III-A); per-stage busy times land in the iteration record.
+* ``NaiveDaemon``       — per-edge host loop; the "upper system without
+  accelerator" baseline of Fig. 8.
+
+New backends register with :func:`register_daemon`; see DESIGN.md §3 for
+a worked "write your own daemon" example (a vmapped multi-device daemon
+fits in ~20 lines).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pipeline as pl
+from repro.core.blocks import BlockSet
+from repro.core.template import VertexProgram
+
+KERNELS = ("reference", "pallas")
+
+
+# --------------------------------------------------------------------------
+# jitted block programs (shared by the vectorized / blocked / pipelined
+# daemons; fixed shapes in, fixed shapes out, compiled once per bucket)
+# --------------------------------------------------------------------------
+def make_block_fn(program: VertexProgram, *, kernel: str = "reference"):
+    """Per-block Gen + block-local Merge → (nb, VB, K) partials."""
+    if kernel not in KERNELS:
+        raise ValueError(f"kernel must be one of {KERNELS}, got {kernel!r}")
+    monoid = program.monoid
+    k = program.state_width
+
+    if kernel == "pallas":
+        from repro.kernels import ops as kops
+
+        @jax.jit
+        def block_fn(state, aux, vids, lsrc, ldst, w, emask):
+            return kops.edge_block_aggregate(
+                state, aux, vids, lsrc, ldst, w, emask,
+                program=program)
+
+        return block_fn
+
+    @jax.jit
+    def block_fn(state, aux, vids, lsrc, ldst, w, emask):
+        nb, vb = vids.shape
+        b = lsrc.shape[1]
+        vstate = state[vids]  # (nb, VB, K) gather
+        vaux = aux[vids]
+        s = jnp.take_along_axis(vstate, lsrc[..., None], axis=1)
+        d = jnp.take_along_axis(vstate, ldst[..., None], axis=1)
+        sa = jnp.take_along_axis(vaux, lsrc[..., None], axis=1)
+        msgs = program.msg_gen(
+            s.reshape(nb * b, k), d.reshape(nb * b, k),
+            w.reshape(nb * b, 1), sa.reshape(nb * b, -1)).reshape(nb, b, k)
+        msgs = jnp.where(emask[..., None], msgs, monoid.identity)
+        seg = (ldst + jnp.arange(nb, dtype=ldst.dtype)[:, None] * vb).reshape(-1)
+        partial = monoid.segment_reduce(msgs.reshape(nb * b, k), seg, nb * vb)
+        partial = partial.reshape(nb, vb, k)
+        counts = jax.ops.segment_sum(
+            emask.reshape(-1).astype(jnp.int32), seg, nb * vb).reshape(nb, vb)
+        return partial, counts
+
+    return block_fn
+
+
+def make_combine_fn(program: VertexProgram, n: int):
+    monoid = program.monoid
+
+    @jax.jit
+    def combine(partial, counts, vids):
+        nbvb, k = partial.shape[0] * partial.shape[1], partial.shape[2]
+        flat_ids = vids.reshape(-1)
+        agg = monoid.segment_reduce(partial.reshape(nbvb, k), flat_ids, n)
+        cnt = jax.ops.segment_sum(counts.reshape(-1), flat_ids, n)
+        return agg, cnt
+
+    return combine
+
+
+def pad_pow2(sel: np.ndarray, nb_total: int) -> np.ndarray:
+    """Pads selected block ids to the next power of two (bounded
+    recompiles); padding is marked -1 and killed via emask in gather."""
+    n = int(sel.size)
+    target = 1 << max(0, (n - 1).bit_length())
+    if target == n:
+        return sel
+    return np.concatenate([sel, np.full(target - n, -1, dtype=sel.dtype)])
+
+
+def gather_blocks(bs: BlockSet, sel: np.ndarray):
+    """Stacks the selected blocks; sel == -1 → dead block (emask False)."""
+    live = sel >= 0
+    idx = np.where(live, sel, 0)
+    vids = bs.vids[idx]
+    lsrc = bs.lsrc[idx]
+    ldst = bs.ldst[idx]
+    w = bs.weights[idx]
+    emask = bs.emask[idx] & live[:, None]
+    return (jnp.asarray(vids), jnp.asarray(lsrc), jnp.asarray(ldst),
+            jnp.asarray(w), jnp.asarray(emask))
+
+
+# --------------------------------------------------------------------------
+# daemons
+# --------------------------------------------------------------------------
+class VectorizedDaemon:
+    """All active blocks in one fused jit call — the optimized path."""
+
+    name = "vectorized"
+
+    def __init__(self, kernel: str = "reference"):
+        if kernel not in KERNELS:
+            raise ValueError(f"kernel must be one of {KERNELS}, got {kernel!r}")
+        self.kernel = kernel
+        self.program = None
+        self.block_fn = None
+        self._combine_fn = None
+
+    def bind(self, program: VertexProgram, num_vertices: int):
+        self.program = program
+        self.n = num_vertices
+        self.block_fn = make_block_fn(program, kernel=self.kernel)
+        self._combine_fn = make_combine_fn(program, num_vertices)
+        return self
+
+    def run_blocks(self, state, aux, blockset, sel, record):
+        sel_p = pad_pow2(sel, blockset.num_blocks)
+        arrs = gather_blocks(blockset, sel_p)
+        partial, counts = self.block_fn(jnp.asarray(state), jnp.asarray(aux),
+                                        *arrs)
+        agg, cnt = self._combine_fn(partial, counts, arrs[0])
+        return np.asarray(agg), np.asarray(cnt)
+
+
+class _StreamingDaemon:
+    """Shared Download→Compute→Upload loop for blocked/pipelined daemons."""
+
+    pipelined = False
+
+    def __init__(self, kernel: str = "reference"):
+        if kernel not in KERNELS:
+            raise ValueError(f"kernel must be one of {KERNELS}, got {kernel!r}")
+        self.kernel = kernel
+        self.program = None
+        self.block_fn = None
+
+    def bind(self, program: VertexProgram, num_vertices: int):
+        self.program = program
+        self.n = num_vertices
+        self.block_fn = make_block_fn(program, kernel=self.kernel)
+        return self
+
+    def run_blocks(self, state, aux, bs, sel, record):
+        monoid = self.program.monoid
+        k = self.program.state_width
+        agg = np.full((self.n, k), monoid.identity, np.float32)
+        cnt = np.zeros(self.n, np.int64)
+        state_dev = jnp.asarray(state)
+        aux_dev = jnp.asarray(aux)
+
+        def download(i: int, slot: dict):
+            b = int(sel[i])
+            slot["arrs"] = tuple(
+                jnp.asarray(a[b : b + 1])
+                for a in (bs.vids, bs.lsrc, bs.ldst, bs.weights, bs.emask)
+            )
+            slot["vids"] = bs.vids[b]
+
+        def compute(i: int, slot: dict):
+            partial, counts = self.block_fn(state_dev, aux_dev, *slot["arrs"])
+            slot["partial"], slot["counts"] = partial, counts  # async refs
+
+        def upload(i: int, slot: dict):
+            partial = np.asarray(slot["partial"])[0]
+            counts = np.asarray(slot["counts"])[0]
+            vids = slot["vids"]
+            if monoid.name == "sum":
+                np.add.at(agg, vids, partial)
+            elif monoid.name == "min":
+                np.minimum.at(agg, vids, partial)
+            else:
+                np.maximum.at(agg, vids, partial)
+            np.add.at(cnt, vids, counts)
+
+        if self.pipelined:
+            res = pl.PipelinedExecutor(download, compute, upload).run(sel.size)
+            record.setdefault("pipeline", []).append(res)
+        else:
+            res = pl.run_sequential(download, compute, upload, sel.size)
+            record.setdefault("sequential", []).append(res)
+        return agg, cnt.astype(np.int32)
+
+
+class BlockedDaemon(_StreamingDaemon):
+    name = "blocked"
+    pipelined = False
+
+
+class PipelinedDaemon(_StreamingDaemon):
+    name = "pipelined"
+    pipelined = True
+
+
+class NaiveDaemon:
+    """Per-edge Python loop on the host — deliberately slow; exists so the
+    acceleration ratio of real daemons is measurable (Fig. 8)."""
+
+    name = "naive"
+
+    def bind(self, program: VertexProgram, num_vertices: int):
+        self.program = program
+        self.n = num_vertices
+        return self
+
+    def run_blocks(self, state, aux, bs, sel, record):
+        prog = self.program
+        monoid = prog.monoid
+        k = prog.state_width
+        agg = np.full((self.n, k), monoid.identity, np.float32)
+        cnt = np.zeros(self.n, np.int64)
+        for b in sel:
+            b = int(b)
+            for e in range(bs.block_size):
+                if not bs.emask[b, e]:
+                    continue
+                s, d = int(bs.gsrc[b, e]), int(bs.gdst[b, e])
+                msg = np.asarray(prog.msg_gen(
+                    state[s : s + 1], state[d : d + 1],
+                    bs.weights[b, e : e + 1], aux[s : s + 1]))[0]
+                if monoid.name == "sum":
+                    agg[d] += msg
+                elif monoid.name == "min":
+                    agg[d] = np.minimum(agg[d], msg)
+                else:
+                    agg[d] = np.maximum(agg[d], msg)
+                cnt[d] += 1
+        return agg, cnt.astype(np.int32)
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+_DAEMONS: dict = {}
+
+
+def register_daemon(name: str, factory) -> None:
+    """Registers a daemon factory; ``factory(**kwargs)`` must return an
+    object satisfying the :class:`~repro.plug.protocols.Daemon` protocol."""
+    _DAEMONS[name] = factory
+
+
+def get_daemon(name: str, **kwargs):
+    """Builds a fresh (unbound) daemon by registry name."""
+    try:
+        factory = _DAEMONS[name]
+    except KeyError:
+        raise KeyError(f"unknown daemon {name!r}; registered: "
+                       f"{sorted(_DAEMONS)}") from None
+    return factory(**kwargs)
+
+
+def daemon_names() -> tuple:
+    return tuple(sorted(_DAEMONS))
+
+
+register_daemon("vectorized", VectorizedDaemon)
+register_daemon("reference", functools.partial(VectorizedDaemon,
+                                               kernel="reference"))
+register_daemon("pallas", functools.partial(VectorizedDaemon,
+                                            kernel="pallas"))
+register_daemon("blocked", BlockedDaemon)
+register_daemon("pipelined", PipelinedDaemon)
+register_daemon("naive", NaiveDaemon)

@@ -1,0 +1,261 @@
+"""The middleware: agents + drive loop composed from the three protocols.
+
+``Middleware`` owns exactly what the paper's *agent* role owns — per-shard
+host state (vertex table replicas, LRU boundary caches, block sets, byte
+accounting) and the iteration drive loop — and delegates everything else:
+
+* device compute to the :class:`~repro.plug.protocols.Daemon`
+  (``daemon.run_blocks`` per shard per iteration),
+* partitioning / exchange planning / the global merge to the
+  :class:`~repro.plug.protocols.UpperSystem`,
+* Gen/Merge/Apply ordering to the
+  :class:`~repro.plug.protocols.ComputationModel`.
+
+No backend, upper-system, or model names appear below — components are
+resolved once in ``__init__`` (strings go through the registries) and
+only protocol methods are called afterwards.  The legacy ``GXEngine``
+flag surface lives in ``repro.core.engine`` as a deprecation shim over
+this class.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pipeline as pl
+from repro.core.blocks import build_blocks
+from repro.core.sync import LRUVertexCache, SyncStats, can_skip_sync
+from repro.core.template import VertexProgram
+from repro.graph.structure import EdgePartition, Graph
+from repro.plug.computation import get_model
+from repro.plug.daemons import get_daemon
+from repro.plug.protocols import PlugOptions, Result
+from repro.plug.uppers import get_upper_system
+
+
+def make_apply_fn(program: VertexProgram):
+    @jax.jit
+    def apply_fn(state, merged, has_msg, aux, it):
+        # Vertices with no message keep identity-merged values; msg_apply
+        # implementations treat identity correctly (min/max) or use has_msg.
+        merged = jnp.where(has_msg[:, None], merged,
+                           jnp.full_like(merged, program.monoid.identity))
+        return program.msg_apply(state, merged, has_msg[:, None], aux, it)
+
+    return apply_fn
+
+
+class Middleware:
+    """Drives a VertexProgram through pluggable components.
+
+    Args:
+      graph, program: the workload.
+      daemon: accelerator backend — a registry name (``"reference"``,
+        ``"pallas"``, ``"blocked"``, ``"pipelined"``, ``"naive"``, …) or
+        an unbound Daemon instance.
+      upper: upper system — ``"host"`` / ``"mesh"`` or an instance.
+      model: computation model — ``"bsp"`` / ``"gas"`` or an instance.
+      partitions: explicit edge partitions; defaults to the upper
+        system's partitioner over ``num_shards``.
+      options: :class:`~repro.plug.protocols.PlugOptions`.
+    """
+
+    def __init__(
+        self,
+        graph: Graph,
+        program: VertexProgram,
+        *,
+        daemon="reference",
+        upper="host",
+        model="bsp",
+        partitions: list[EdgePartition] | None = None,
+        num_shards: int = 1,
+        options: PlugOptions | None = None,
+    ):
+        self.graph = graph
+        self.program = program
+        self.options = options or PlugOptions()
+        self.daemon = get_daemon(daemon) if isinstance(daemon, str) else daemon
+        self.upper = (get_upper_system(upper) if isinstance(upper, str)
+                      else upper)
+        self.model = get_model(model) if isinstance(model, str) else model
+
+        if partitions is None:
+            partitions = self.upper.partition(graph, num_shards)
+        self.partitions = list(partitions)
+        self.num_shards = len(self.partitions)
+        self.n = graph.num_vertices
+        self.k = program.state_width
+
+        b = self._resolve_block_size()
+        self.block_size = b
+        self.blocksets = [build_blocks(p, b) for p in self.partitions]
+        # One vertex-block width for all shards → one compiled daemon program.
+        vb = max(bs.vblock_size for bs in self.blocksets)
+        self.blocksets = [build_blocks(p, b, vblock_size=vb)
+                          for p in self.partitions]
+        self.vblock_size = vb
+
+        self.daemon.bind(program, self.n)
+        self.upper.bind(program, self.num_shards)
+        self._apply_fn = make_apply_fn(program)
+        self.stats = SyncStats()
+        self._caches = [
+            LRUVertexCache(self.options.cache_capacity)
+            for _ in range(self.num_shards)
+        ]
+
+    # -- setup ------------------------------------------------------------
+    def _resolve_block_size(self) -> int:
+        o = self.options
+        if o.block_size == "auto":
+            d = max(1, max(p.num_edges for p in self.partitions))
+            best_b, _ = pl.optimal_integer_blocks(d, o.k1, o.k2, o.k3, o.a)
+            return int(min(max(best_b, 64), 1 << 16))
+        return int(o.block_size)
+
+    # -- one shard's Gen + per-block Merge ---------------------------------
+    def _shard_aggregate(self, j: int, state_j: np.ndarray, aux: np.ndarray,
+                         active_j: np.ndarray | None, record: dict):
+        """Agent work for shard j → (N,K) aggregate, (N,) counts, read ids."""
+        bs = self.blocksets[j]
+        o = self.options
+        if (self.program.frontier_driven and o.frontier_block_skipping
+                and active_j is not None):
+            blk_active = np.any(active_j[bs.gsrc] & bs.emask, axis=1)
+            sel = np.nonzero(blk_active)[0]
+        else:
+            sel = np.arange(bs.num_blocks)
+        record["blocks_total"] = record.get("blocks_total", 0) + bs.num_blocks
+        record["blocks_run"] = record.get("blocks_run", 0) + int(sel.size)
+        if sel.size == 0:
+            agg = np.full((self.n, self.k), self.program.monoid.identity,
+                          np.float32)
+            return agg, np.zeros(self.n, np.int32), np.empty(0, np.int64)
+
+        # LRU cache accounting for boundary reads (Sec. III-B2).
+        read_ids = np.unique(bs.gsrc[sel][bs.emask[sel]])
+        boundary_reads = read_ids[self.partitions[j].boundary_mask[read_ids]]
+        rowbytes = 4 * self.k + 8
+        if o.sync_caching:
+            cache = self._caches[j]
+            hit = cache.lookup(boundary_reads.astype(np.int64))
+            cache.insert(boundary_reads[~hit].astype(np.int64))
+            self.stats.cache_hits += int(hit.sum())
+            self.stats.cache_misses += int((~hit).sum())
+            self.stats.download_bytes_cache += int((~hit).sum()) * rowbytes
+        self.stats.download_bytes_nocache += int(boundary_reads.size) * rowbytes
+
+        agg, cnt = self.daemon.run_blocks(state_j, aux, bs, sel, record)
+        return np.asarray(agg), np.asarray(cnt), read_ids
+
+    # -- the drive loop -----------------------------------------------------
+    def run(self, max_iterations: int | None = None) -> Result:
+        prog = self.program
+        o = self.options
+        self.upper.reset()
+        max_it = max_iterations or prog.max_iterations
+        state0, aux = prog.init(self.graph)
+        states = [state0.copy() for _ in range(self.num_shards)]
+        actives = [np.ones(self.n, dtype=bool) for _ in range(self.num_shards)]
+        skip_ok = o.sync_skipping and prog.supports_sync_skipping()
+        per_iter: list[dict] = []
+        rowbytes = 4 * self.k + 8
+        t0 = time.perf_counter()
+        it = 0
+        converged = False
+
+        def gather(rec: dict):
+            return [
+                self._shard_aggregate(j, states[j], aux, actives[j], rec)
+                for j in range(self.num_shards)
+            ]
+
+        pending = self.model.prologue(gather)
+
+        for it in range(1, max_it + 1):
+            rec: dict = {"iteration": it}
+            for c in self._caches:
+                c.tick()
+            results = self.model.aggregates(gather, pending, rec)
+            pending = None
+
+            aggs = [r[0] for r in results]
+            cnts = [r[1] for r in results]
+
+            # Local candidate apply (needed for skip detection).
+            new_states, new_actives, updated_ids = [], [], []
+            for j in range(self.num_shards):
+                ns, act = self._apply_fn(
+                    jnp.asarray(states[j]), jnp.asarray(aggs[j]),
+                    jnp.asarray(cnts[j] > 0), jnp.asarray(aux), it)
+                ns, act = np.asarray(ns), np.asarray(act)
+                new_states.append(ns)
+                new_actives.append(act)
+                updated_ids.append(np.nonzero(act)[0])
+
+            boundary_masks = [p.boundary_mask for p in self.partitions]
+            skipped = skip_ok and self.num_shards > 1 and can_skip_sync(
+                updated_ids, boundary_masks)
+            self.stats.rounds_total += 1
+            rec["skipped"] = bool(skipped)
+
+            if skipped:
+                self.stats.rounds_skipped += 1
+                states = new_states
+                actives = new_actives
+            else:
+                # Global merge ("upper system synchronization").
+                states, actives = self._global_sync(
+                    states, aggs, cnts, aux, it,
+                    updated_ids, boundary_masks, rowbytes, rec)
+
+            rec["active"] = int(np.max([a.sum() for a in actives]))
+            per_iter.append(rec)
+            if all(a.sum() == 0 for a in actives):
+                converged = True
+                break
+            pending = self.model.epilogue(gather, rec)
+
+        final = self.upper.resolve(states)
+        return Result(
+            state=final,
+            iterations=it,
+            converged=converged,
+            stats=self.stats,
+            wall_time=time.perf_counter() - t0,
+            per_iteration=per_iter,
+        )
+
+    def _global_sync(self, states, aggs, cnts, aux, it,
+                     updated_ids, boundary_masks, rowbytes, rec):
+        o = self.options
+        # Byte accounting: dense exchange vs lazy upload (Alg. 3).
+        self.stats.dense_bytes += self.num_shards * self.n * self.k * 4
+        queried = []
+        for j in range(self.num_shards):
+            reads = np.unique(self.blocksets[j].gsrc[self.blocksets[j].emask])
+            queried.append(reads[boundary_masks[j][reads]].astype(np.int64))
+        upd_boundary = [
+            u[boundary_masks[j][u]].astype(np.int64)
+            for j, u in enumerate(updated_ids)
+        ]
+        gqq, uploads = self.upper.exchange(upd_boundary, queried)
+        self.stats.lazy_bytes += int(sum(u.size for u in uploads)) * rowbytes
+        self.stats.lazy_bytes += int(gqq.size) * 8  # query-queue broadcast
+        if o.sync_caching:
+            changed = np.unique(np.concatenate([u for u in uploads] or
+                                               [np.empty(0, np.int64)]))
+            for c in self._caches:
+                c.invalidate(changed)
+
+        base, agg, cnt = self.upper.merge(states, aggs, cnts)
+        ns, act = self._apply_fn(jnp.asarray(base), jnp.asarray(agg),
+                                 jnp.asarray(cnt) > 0, jnp.asarray(aux), it)
+        ns, act = np.asarray(ns), np.asarray(act)
+        return [ns.copy() for _ in range(self.num_shards)], [
+            act.copy() for _ in range(self.num_shards)
+        ]

@@ -1,0 +1,155 @@
+"""The three plug-in seams of the middleware (DESIGN.md §2).
+
+GX-Plug's portability claim is that one middleware serves different
+accelerator backends, different distributed upper systems, and different
+computation models.  This module states those seams as structural
+protocols; ``plug.Middleware`` is composed from one implementation of
+each and never inspects which one it got:
+
+* :class:`Daemon` — the accelerator backend.  A daemon is bound to one
+  :class:`~repro.core.template.VertexProgram` and then answers
+  ``run_blocks``: given the shard vertex table and a selection of edge
+  blocks, return the shard's merged (N, K) message aggregate and per-
+  vertex message counts.  Everything device-side (jit, Pallas, batching
+  strategy, pipelining) is the daemon's business.
+* :class:`UpperSystem` — the distributed-system side: graph
+  partitioning, the lazy exchange plan, and the cross-shard global merge
+  of states/aggregates/counts.  ``HostUpperSystem`` merges on the host
+  (NumPy/jnp); ``MeshUpperSystem`` stacks shards onto a device mesh and
+  merges with ``shard_map`` collectives (``repro.dist``).
+* :class:`ComputationModel` — the strategy ordering Gen/Merge/Apply.
+  BSP gathers aggregates inside the superstep; GAS scatters at the end
+  of the previous one.  New models (async, priority) implement the same
+  three hooks.
+
+Implementations register under a name (``plug.register_daemon`` etc.) so
+callers can select backends by string; passing an instance works too.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Protocol, Sequence, Tuple, runtime_checkable
+
+import numpy as np
+
+from repro.core.blocks import BlockSet
+from repro.core.sync import SyncStats
+from repro.core.template import VertexProgram
+from repro.graph.structure import EdgePartition, Graph
+
+
+@dataclasses.dataclass
+class PlugOptions:
+    """Options of the middleware itself — component-neutral knobs only.
+
+    Backend, upper system, and computation model are *arguments* of
+    ``Middleware``, not flags here; the legacy flag surface lives in
+    ``repro.core.engine.EngineOptions`` (deprecated shim).
+    """
+
+    block_size: int | str = "auto"  # edges per block; "auto" → Lemma 1
+    sync_caching: bool = True
+    sync_skipping: bool = True
+    cache_capacity: int = 1 << 14
+    frontier_block_skipping: bool = True
+    # calibrated Lemma-1 coefficients (entities = edges)
+    k1: float = 2e-8
+    k2: float = 6e-8
+    k3: float = 2e-8
+    a: float = 2e-4
+
+
+@dataclasses.dataclass
+class Result:
+    """What a middleware run returns (same shape the legacy engine used)."""
+
+    state: np.ndarray  # (N, K) final vertex state
+    iterations: int
+    converged: bool
+    stats: SyncStats
+    wall_time: float
+    per_iteration: list[dict]
+
+
+@runtime_checkable
+class Daemon(Protocol):
+    """Accelerator backend: block programs behind one ``run_blocks``."""
+
+    name: str
+
+    def bind(self, program: VertexProgram, num_vertices: int) -> "Daemon":
+        """Compiles/prepares the daemon for one program; returns self."""
+        ...
+
+    def run_blocks(self, state: np.ndarray, aux: np.ndarray,
+                   blockset: BlockSet, sel: np.ndarray,
+                   record: dict) -> Tuple[np.ndarray, np.ndarray]:
+        """Gen + Merge over the selected blocks of one shard.
+
+        Args:
+          state, aux: the shard's (N, K) / (N, A) vertex table.
+          blockset: the shard's packed edge blocks.
+          sel: int array of block indices to run (frontier-active blocks).
+          record: per-iteration dict the daemon may append timings to.
+        Returns:
+          (agg, cnt): (N, K) monoid-merged messages and (N,) int counts.
+        """
+        ...
+
+
+@runtime_checkable
+class UpperSystem(Protocol):
+    """Distributed-system side: partition, exchange, global merge."""
+
+    name: str
+
+    def partition(self, graph: Graph, num_shards: int) -> List[EdgePartition]:
+        ...
+
+    def bind(self, program: VertexProgram, num_shards: int) -> "UpperSystem":
+        ...
+
+    def reset(self) -> None:
+        """Called at the start of every run; clears per-run state."""
+        ...
+
+    def exchange(self, updated_boundary: List[np.ndarray],
+                 queried: List[np.ndarray]) -> Tuple[np.ndarray, List[np.ndarray]]:
+        """Lazy exchange plan: (global query queue, per-shard uploads)."""
+        ...
+
+    def merge(self, states: List[np.ndarray], aggs: List[np.ndarray],
+              cnts: List[np.ndarray]):
+        """Cross-shard merge → (base_state, merged_agg, total_cnt)."""
+        ...
+
+    def resolve(self, states: List[np.ndarray]) -> np.ndarray:
+        """Final answer from per-shard state replicas."""
+        ...
+
+
+# ``gather`` passed to a ComputationModel: calls every shard's daemon and
+# returns the per-shard (agg, cnt, read_ids) results for this iteration.
+GatherFn = Callable[[dict], Sequence[tuple]]
+
+
+@runtime_checkable
+class ComputationModel(Protocol):
+    """Orders Gen / Merge / Apply across the superstep boundary."""
+
+    name: str
+    order: tuple
+
+    def prologue(self, gather: GatherFn):
+        """Runs before the drive loop; returns the initial pending
+        aggregates (GAS scatters here) or None (BSP)."""
+        ...
+
+    def aggregates(self, gather: GatherFn, pending, record: dict):
+        """Returns the aggregates consumed by this iteration's Merge."""
+        ...
+
+    def epilogue(self, gather: GatherFn, record: dict):
+        """Runs after Apply (non-converged iterations); returns the
+        pending aggregates for the next iteration or None."""
+        ...

@@ -1,0 +1,261 @@
+"""Upper systems (the distributed side of the middleware, DESIGN.md §2).
+
+An upper system owns everything global: how the graph is partitioned
+into shards, the lazy exchange plan between iterations, and the
+cross-shard merge of vertex states / message aggregates / counts.
+
+* ``HostUpperSystem`` — the single-host upper system: merge runs as a
+  NumPy/jnp fold over per-shard arrays on the host.  This preserves the
+  exact semantics the legacy ``GXEngine`` shipped.
+* ``MeshUpperSystem`` — shards stacked onto a device mesh (placement via
+  ``repro.dist.sharding``) and merged with ``shard_map`` collectives:
+  ``pmin``/``pmax`` for idempotent monoids (exact), ``psum`` for sum —
+  optionally through the int8 error-feedback compressed wire of
+  ``repro.dist.collectives.make_compressed_allreduce``
+  (``wire="compressed"``, sum monoid only; exact by default).
+
+Both merge folds associate identically (local fold per device group,
+then the cross-group collective), so for idempotent monoids host and
+mesh produce bit-identical states.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.core.sync import lazy_exchange_plan
+from repro.core.template import VertexProgram
+from repro.graph.partition import partition_contiguous
+from repro.graph.structure import Graph
+
+
+class HostUpperSystem:
+    """Host-side merge: today's NumPy/jnp fold, exact legacy semantics."""
+
+    name = "host"
+
+    def partition(self, graph: Graph, num_shards: int):
+        return partition_contiguous(graph, num_shards)
+
+    def bind(self, program: VertexProgram, num_shards: int):
+        self.program = program
+        self.monoid = program.monoid
+        self.num_shards = num_shards
+        return self
+
+    def reset(self):
+        """Called at the start of every ``Middleware.run`` — clears any
+        per-run state so repeated runs are reproducible."""
+
+    def exchange(self, updated_boundary, queried):
+        return lazy_exchange_plan(updated_boundary, queried)
+
+    def merge(self, states, aggs, cnts):
+        import jax.numpy as jnp
+
+        monoid = self.monoid
+        if monoid.idempotent:
+            # States may have diverged across skipped rounds; the
+            # idempotent combine over replicas restores consistency.
+            base = functools.reduce(monoid.combine,
+                                    [jnp.asarray(s) for s in states])
+            agg = functools.reduce(monoid.combine,
+                                   [jnp.asarray(a) for a in aggs])
+        else:
+            base = jnp.asarray(states[0])
+            agg = functools.reduce(lambda x, y: x + y,
+                                   [jnp.asarray(a) for a in aggs])
+        cnt = np.sum(np.stack(cnts), axis=0)
+        return base, agg, cnt
+
+    def resolve(self, states):
+        if len(states) == 1:
+            return states[0]
+        if self.monoid.idempotent:
+            out = states[0]
+            for s in states[1:]:
+                out = np.asarray(self.monoid.combine(out, s))
+            return out
+        return states[0]
+
+
+class MeshUpperSystem(HostUpperSystem):
+    """Global merge as ``shard_map`` collectives over a device mesh.
+
+    Shard arrays are stacked along a leading axis, placed with a
+    ``NamedSharding`` built by ``dist.sharding.sharding_for``, locally
+    folded per device group, and reduced across the mesh axis with
+    ``pmin``/``pmax``/``psum``.  The mesh axis length is the largest
+    divisor of ``num_shards`` that fits the available devices, so the
+    same code runs 4 shards on 1 CPU device (local fold only) and 4
+    shards on 4 devices (pure collective).
+
+    ``wire="compressed"`` routes the sum-monoid aggregate through the
+    int8 error-feedback all-reduce (``dist.collectives``) — the graph-
+    engine analogue of compressed gradient sync; ``wire="exact"`` (the
+    default) keeps the merge lossless.
+    """
+
+    name = "mesh"
+    WIRES = ("exact", "compressed")
+
+    def __init__(self, mesh=None, *, axis: str = "shard",
+                 wire: str = "exact", bits: int = 8):
+        if wire not in self.WIRES:
+            raise ValueError(f"wire must be one of {self.WIRES}, got {wire!r}")
+        self.mesh = mesh
+        self._auto_mesh = mesh is None
+        self.axis = axis
+        self.wire = wire
+        self.bits = bits
+        self._merge_fn = None
+        self._allreduce = None
+        self._residual = None
+        self.wire_stats = {"exact_bytes": 0, "compressed_bytes": 0}
+
+    def bind(self, program: VertexProgram, num_shards: int):
+        import jax
+
+        super().bind(program, num_shards)
+        # Rebinding (a reused instance in a new Middleware) must not keep
+        # compiled fns or residuals built for the previous shard layout.
+        self._merge_fn = None
+        self._allreduce = None
+        self._residual = None
+        if self.wire == "compressed" and program.monoid.idempotent:
+            raise ValueError(
+                "wire='compressed' quantizes a summed aggregate; idempotent "
+                "(min/max) merges must use wire='exact'")
+        if self._auto_mesh:
+            ndev = len(jax.devices())
+            m = 1
+            for d in range(min(num_shards, ndev), 0, -1):
+                if num_shards % d == 0:
+                    m = d
+                    break
+            self.mesh = jax.make_mesh((m,), (self.axis,))
+        self.m = self.mesh.shape[self.axis]
+        if num_shards % self.m:
+            raise ValueError(f"num_shards={num_shards} not divisible by "
+                             f"mesh axis {self.axis}={self.m}")
+        # leading (shard) dim on the mesh axis, everything else replicated —
+        # resolved through the dist.sharding rule machinery
+        self._rules = {"shards": (self.axis,)}
+        if self.wire == "compressed":
+            from repro.dist.collectives import make_compressed_allreduce
+
+            self._allreduce = make_compressed_allreduce(
+                self.mesh, self.axis, bits=self.bits)
+        return self
+
+    def _place(self, arr):
+        import jax
+        from repro.dist import sharding as shd
+
+        axes = ("shards",) + (None,) * (arr.ndim - 1)
+        sh = shd.sharding_for(arr.shape, axes, self.mesh, self._rules)
+        return jax.device_put(arr, sh)
+
+    def reset(self):
+        # error-feedback residual is per-run state; stats accumulate
+        self._residual = None
+
+    def _build_merge(self, s_per_dev: int, with_agg: bool):
+        import jax
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        monoid = self.monoid
+        axis = self.axis
+
+        def block(st, ag, cn):
+            # st/ag: (S/m, N, K) local slices; cn: (S/m, N)
+            base_l, ag_l = st[0], ag[0]
+            for i in range(1, s_per_dev):  # static local fold
+                if with_agg:
+                    ag_l = (monoid.combine(ag_l, ag[i]) if monoid.idempotent
+                            else ag_l + ag[i])
+                if monoid.idempotent:
+                    base_l = monoid.combine(base_l, st[i])
+            cn_l = cn.sum(axis=0)
+            if monoid.idempotent:
+                red = jax.lax.pmin if monoid.name == "min" else jax.lax.pmax
+                base = red(base_l, axis)
+                agg = red(ag_l, axis) if with_agg else ag_l
+            else:
+                # sum-monoid replicas never diverge (no sync skipping), so
+                # any shard's state is the base
+                base = base_l
+                agg = jax.lax.psum(ag_l, axis) if with_agg else ag_l
+            cnt = jax.lax.psum(cn_l, axis)
+            return base, agg, cnt
+
+        spec = P(self.axis)
+        fn = shard_map(block, mesh=self.mesh,
+                       in_specs=(spec, spec, spec),
+                       out_specs=(P(), P(), P()), check_rep=False)
+        return jax.jit(fn)
+
+    def merge(self, states, aggs, cnts):
+        s = len(states)
+        compressed = self.wire == "compressed"
+        stacked_s = self._place(np.stack(states))
+        stacked_a = self._place(np.stack(aggs))
+        stacked_c = self._place(np.stack(cnts).astype(np.int32))
+        if self._merge_fn is None:
+            self._merge_fn = self._build_merge(s // self.m,
+                                               with_agg=not compressed)
+        base, agg, cnt = self._merge_fn(stacked_s, stacked_a, stacked_c)
+        nbytes = int(np.prod(states[0].shape)) * 4
+        if compressed:
+            # the exact merge fn skipped its agg psum; the aggregate
+            # travels the int8 error-feedback wire instead
+            agg = self._compressed_sum(aggs)
+            self.wire_stats["compressed_bytes"] += (
+                (nbytes * self.bits) // 32 + 4) * self.m
+        else:
+            self.wire_stats["exact_bytes"] += nbytes * self.m
+        return base, agg, cnt
+
+    def _compressed_sum(self, aggs):
+        """Sum-monoid aggregate over the int8 error-feedback wire."""
+        import jax.numpy as jnp
+
+        s = len(aggs)
+        parts = np.stack(aggs).reshape(self.m, s // self.m,
+                                       *aggs[0].shape).sum(axis=1)
+        x = self._place(parts.astype(np.float32))
+        if self._residual is None:
+            self._residual = self._place(np.zeros_like(parts, np.float32))
+        means, self._residual = self._allreduce(x, self._residual)
+        # every row of the (m, N, K) output equals the mean of the m
+        # per-device partials; sum = mean × m
+        return jnp.asarray(np.asarray(means)[0] * self.m)
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+_UPPER_SYSTEMS: dict = {}
+
+
+def register_upper_system(name: str, factory) -> None:
+    _UPPER_SYSTEMS[name] = factory
+
+
+def get_upper_system(name: str, **kwargs):
+    try:
+        factory = _UPPER_SYSTEMS[name]
+    except KeyError:
+        raise KeyError(f"unknown upper system {name!r}; registered: "
+                       f"{sorted(_UPPER_SYSTEMS)}") from None
+    return factory(**kwargs)
+
+
+def upper_system_names() -> tuple:
+    return tuple(sorted(_UPPER_SYSTEMS))
+
+
+register_upper_system("host", HostUpperSystem)
+register_upper_system("mesh", MeshUpperSystem)

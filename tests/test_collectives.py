@@ -78,5 +78,84 @@ def test_shard_map_compressed_allreduce_runs():
                                    np.asarray(x["g"]), rtol=2e-2, atol=2e-2)
 
 
+def _host_int8_wire(shards, bits=8):
+    """Host oracle of the real int8 wire round: scale all-gather → shared
+    max scale → int32 accumulation → one dequantize. Returns the mean."""
+    qmax = (1 << (bits - 1)) - 1
+    # float32 arithmetic throughout, in the same op order as the device path
+    scales = [np.maximum(np.max(np.abs(x)), np.float32(1e-12)) / np.float32(qmax)
+              for x in shards]
+    shared = np.max(np.stack(scales)).astype(np.float32)
+    acc = np.zeros_like(shards[0], dtype=np.int32)
+    for x in shards:
+        q = np.clip(np.round(x / shared), -qmax, qmax).astype(np.int8)
+        acc += q.astype(np.int32)  # exact integer accumulation
+    return acc.astype(np.float32) * shared / np.float32(len(shards))
+
+
+@pytest.mark.parametrize("wire", ["int8", "emulated"])
+def test_wire_formats_approximate_true_mean(wire):
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n,), ("data",))
+    run = C.make_compressed_allreduce(mesh, "data", wire=wire)
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((n * 16,)), jnp.float32)
+    r = jnp.zeros_like(x)
+    with mesh:
+        means, new_r = run(x, r)
+    true_mean = np.mean(np.asarray(x).reshape(n, 16), axis=0)
+    got = np.asarray(means).reshape(n, 16)
+    for j in range(n):
+        np.testing.assert_allclose(got[j], true_mean, atol=5e-2)
+    # residual bounded by half a quantization step of the shard's payload
+    assert float(jnp.max(jnp.abs(new_r))) <= float(jnp.max(jnp.abs(x))) / 127
+
+
+def test_int8_wire_matches_host_oracle():
+    """The shard_map int8 path matches the host model of shared-scale
+    requantize + int32 accumulate to within one float ulp (XLA may
+    reassociate the final dequantize's scale/size multiply)."""
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n,), ("data",))
+    run = C.make_compressed_allreduce(mesh, "data", wire="int8")
+    rng = np.random.default_rng(8)
+    x_host = rng.standard_normal((n, 32)).astype(np.float32)
+    with mesh:
+        means, _ = run(jnp.asarray(x_host.reshape(-1)),
+                       jnp.zeros(n * 32, jnp.float32))
+    expect = _host_int8_wire([x_host[j] for j in range(n)])
+    got = np.asarray(means).reshape(n, 32)
+    for j in range(n):
+        np.testing.assert_allclose(got[j], expect, rtol=2e-7, atol=1e-7)
+
+
+def test_int8_wire_error_feedback_conserves_mass():
+    """Over iterations, wire payloads + final residual == inputs (per
+    shard), independent of the shared-scale wire format."""
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n,), ("data",))
+    run = C.make_compressed_allreduce(mesh, "data", wire="int8")
+    rng = np.random.default_rng(9)
+    res = jnp.zeros((n * 8,), jnp.float32)
+    tot_in = np.zeros(n * 8)
+    tot_wire = np.zeros(n * 8)
+    with mesh:
+        for _ in range(10):
+            x = jnp.asarray(rng.standard_normal(n * 8), jnp.float32)
+            tot_in += np.asarray(x)
+            new_res_in = res
+            means, res = run(x, new_res_in)
+            # wire payload = (x + res_in) - res_out per shard
+            tot_wire += np.asarray(x) + np.asarray(new_res_in) - np.asarray(res)
+    np.testing.assert_allclose(tot_wire + np.asarray(res), tot_in, atol=1e-4)
+
+
+def test_wire_format_validation():
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n,), ("data",))
+    with pytest.raises(ValueError):
+        C.make_compressed_allreduce(mesh, "data", wire="fp4")
+
+
 def test_bytes_saved():
     assert C.collective_bytes_saved(1000) == 500

@@ -89,5 +89,5 @@ def test_live_scan_flops_match_unrolled():
     assert stats.dot_flops == expect_dot_flops
     # cost_analysis on the unrolled module counts the same dots (plus
     # elementwise tanh, which we deliberately exclude) — sanity window
-    ca = unroll.cost_analysis()["flops"]
+    ca = H.xla_cost_analysis(unroll)["flops"]
     assert expect_dot_flops <= ca <= expect_dot_flops * 1.2

@@ -1,0 +1,237 @@
+"""The redesign's contract: plug.Middleware ≡ run_reference ≡ legacy
+GXEngine across algorithms × computation models × upper systems, the
+mesh upper system bit-identical on ≥ 2 shards for idempotent monoids,
+and the deprecation shim warning exactly once."""
+import os
+
+# Must precede jax backend init (collection-time import, before any test
+# body runs) — the mesh upper system wants > 1 host device.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import warnings  # noqa: E402
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro import plug  # noqa: E402
+from repro.core.engine import EngineOptions, GXEngine  # noqa: E402
+from repro.graph import generate  # noqa: E402
+from repro.graph.algorithms import pagerank, sssp_bf, wcc  # noqa: E402
+
+MAX_IT = 12
+SHARDS = 2
+BLOCK = 256
+
+_ALGS = {
+    "pagerank": pagerank,
+    "sssp_bf": sssp_bf,
+    "wcc": wcc,
+}
+
+_graph_cache: dict = {}
+_ref_cache: dict = {}
+_legacy_cache: dict = {}
+
+
+def _graph(alg):
+    if "g" not in _graph_cache:
+        _graph_cache["g"] = generate.rmat(256, 2048, seed=9)
+    g = _graph_cache["g"]
+    return g.with_reverse_edges() if alg == "wcc" else g
+
+
+def _reference(alg):
+    if alg not in _ref_cache:
+        g = _graph(alg)
+        _ref_cache[alg] = plug.run_reference(g, _ALGS[alg](g),
+                                             max_iterations=MAX_IT)[0]
+    return _ref_cache[alg]
+
+
+def _legacy(alg, model):
+    key = (alg, model)
+    if key not in _legacy_cache:
+        g = _graph(alg)
+        eng = GXEngine(g, _ALGS[alg](g), num_shards=SHARDS,
+                       options=EngineOptions(model=model, block_size=BLOCK))
+        _legacy_cache[key] = eng.run(max_iterations=MAX_IT).state
+    return _legacy_cache[key]
+
+
+def _compare(a, b, atol=1e-5):
+    fa = np.where(np.isfinite(a), a, 0)
+    fb = np.where(np.isfinite(b), b, 0)
+    np.testing.assert_allclose(fa, fb, atol=atol, rtol=1e-4)
+    np.testing.assert_array_equal(np.isfinite(a), np.isfinite(b))
+
+
+@pytest.mark.parametrize("alg", sorted(_ALGS))
+@pytest.mark.parametrize("model", ["bsp", "gas"])
+@pytest.mark.parametrize("upper", ["host", "mesh"])
+def test_equivalence_matrix(alg, model, upper):
+    """plug.Middleware ≡ run_reference ≡ legacy GXEngine over the full
+    {algorithm} × {computation model} × {upper system} matrix."""
+    g = _graph(alg)
+    prog = _ALGS[alg](g)
+    mw = plug.Middleware(g, prog, daemon="reference", upper=upper,
+                         model=model, num_shards=SHARDS,
+                         options=plug.PlugOptions(block_size=BLOCK))
+    res = mw.run(max_iterations=MAX_IT)
+    ref = _reference(alg)
+    _compare(ref, res.state)
+    _compare(_legacy(alg, model), res.state)
+    if prog.monoid.idempotent:
+        # min/max merges are exact selections — every layer (daemon
+        # blocks, host fold, mesh collectives) must agree bit for bit
+        np.testing.assert_array_equal(ref, res.state)
+
+
+def test_mesh_upper_system_bit_identical_to_reference():
+    """Acceptance: MeshUpperSystem on ≥ 2 shards produces bit-identical
+    final vertex state to run_reference for an idempotent-monoid
+    program — and actually ran on a multi-device mesh."""
+    import jax
+
+    g = generate.rmat(384, 3000, seed=21)
+    prog = sssp_bf(g)
+    upper = plug.MeshUpperSystem()
+    mw = plug.Middleware(g, prog, daemon="reference", upper=upper,
+                         model="bsp", num_shards=4,
+                         options=plug.PlugOptions(block_size=256))
+    res = mw.run(max_iterations=20)
+    ref, _ = plug.run_reference(g, prog, max_iterations=20)
+    np.testing.assert_array_equal(ref, res.state)
+    assert mw.num_shards >= 2
+    assert upper.wire_stats["exact_bytes"] > 0
+    if len(jax.devices()) >= 2:
+        assert upper.mesh.shape[upper.axis] >= 2
+
+
+def test_mesh_compressed_wire_runs_for_sum_monoid():
+    """wire="compressed" pushes sum-monoid aggregates through the int8
+    error-feedback all-reduce of repro.dist.collectives."""
+    g = _graph("pagerank")
+    prog = pagerank(g)
+    upper = plug.MeshUpperSystem(wire="compressed")
+    mw = plug.Middleware(g, prog, daemon="reference", upper=upper,
+                         num_shards=SHARDS,
+                         options=plug.PlugOptions(block_size=BLOCK))
+    res = mw.run(max_iterations=8)
+    ref = _reference("pagerank")
+    # int8 quantization of the aggregate: looser tolerance than exact
+    np.testing.assert_allclose(res.state, ref, atol=5e-3)
+    assert upper.wire_stats["compressed_bytes"] > 0
+
+
+def test_mesh_upper_system_rebind_across_shard_counts():
+    """A reused MeshUpperSystem instance must rebuild its mesh and merge
+    program for the new shard layout (regression: stale _merge_fn
+    silently dropped shards from the global merge)."""
+    g = _graph("pagerank")
+    prog = pagerank(g)
+    upper = plug.MeshUpperSystem()
+    for shards in (2, 4):
+        mw = plug.Middleware(g, prog, upper=upper, num_shards=shards,
+                             options=plug.PlugOptions(block_size=BLOCK))
+        res = mw.run(max_iterations=MAX_IT)
+        _compare(_reference("pagerank"), res.state)
+
+
+def test_mesh_compressed_wire_runs_are_reproducible():
+    """Repeated run() calls start from a cleared error-feedback residual
+    (regression: leftover residual contaminated the next run)."""
+    g = _graph("pagerank")
+    prog = pagerank(g)
+    mw = plug.Middleware(g, prog,
+                         upper=plug.MeshUpperSystem(wire="compressed"),
+                         num_shards=SHARDS,
+                         options=plug.PlugOptions(block_size=BLOCK))
+    a = mw.run(max_iterations=6).state
+    b = mw.run(max_iterations=6).state
+    np.testing.assert_array_equal(a, b)
+
+
+def test_mesh_compressed_wire_rejects_idempotent():
+    g = _graph("sssp_bf")
+    with pytest.raises(ValueError, match="idempotent"):
+        plug.Middleware(g, sssp_bf(g), upper=plug.MeshUpperSystem(
+            wire="compressed"), num_shards=SHARDS)
+
+
+def test_custom_daemon_is_pluggable():
+    """A user backend registers by name and drives the same loop — the
+    middleware never special-cases it."""
+    calls = {"n": 0}
+
+    class CountingDaemon(plug.VectorizedDaemon):
+        name = "counting"
+
+        def run_blocks(self, state, aux, blockset, sel, record):
+            calls["n"] += 1
+            return super().run_blocks(state, aux, blockset, sel, record)
+
+    plug.register_daemon("counting-test", CountingDaemon)
+    try:
+        g = _graph("sssp_bf")
+        prog = sssp_bf(g)
+        mw = plug.Middleware(g, prog, daemon="counting-test",
+                             num_shards=SHARDS,
+                             options=plug.PlugOptions(block_size=BLOCK))
+        res = mw.run(max_iterations=MAX_IT)
+        _compare(_reference("sssp_bf"), res.state)
+        assert calls["n"] > 0
+        assert "counting-test" in plug.daemon_names()
+    finally:
+        plug.daemons._DAEMONS.pop("counting-test", None)
+
+
+def test_unknown_component_names_raise():
+    g = _graph("sssp_bf")
+    with pytest.raises(KeyError, match="unknown daemon"):
+        plug.Middleware(g, sssp_bf(g), daemon="tpu-v9")
+    with pytest.raises(KeyError, match="unknown upper system"):
+        plug.Middleware(g, sssp_bf(g), upper="interplanetary")
+    with pytest.raises(KeyError, match="unknown computation model"):
+        plug.Middleware(g, sssp_bf(g), model="telepathy")
+
+
+def test_registries_list_shipped_components():
+    assert {"vectorized", "reference", "pallas", "blocked", "pipelined",
+            "naive"} <= set(plug.daemon_names())
+    assert {"host", "mesh"} <= set(plug.upper_system_names())
+    assert {"bsp", "gas"} <= set(plug.model_names())
+
+
+def test_gxengine_shim_warns_exactly_once():
+    """The deprecation shim emits DeprecationWarning on first
+    construction only (per process)."""
+    g = _graph("sssp_bf")
+    prog = sssp_bf(g)
+    GXEngine._warned = False  # reset: earlier tests consumed the warning
+    with warnings.catch_warnings(record=True) as seen:
+        warnings.simplefilter("always")
+        GXEngine(g, prog, options=EngineOptions(block_size=BLOCK))
+        GXEngine(g, prog, options=EngineOptions(block_size=BLOCK))
+    dep = [w for w in seen if issubclass(w.category, DeprecationWarning)
+           and "GXEngine" in str(w.message)]
+    assert len(dep) == 1
+    assert "repro.plug.Middleware" in str(dep[0].message)
+
+
+def test_shim_matches_middleware_per_execution_mode():
+    """Every legacy (execution, use_pallas) flag combination maps onto a
+    daemon that reproduces the same result through plug.Middleware."""
+    g = generate.rmat(128, 1024, seed=4)
+    prog = sssp_bf(g)
+    ref, _ = plug.run_reference(g, prog, max_iterations=15)
+    for execution, daemon in [("blocked", "blocked"),
+                              ("vectorized", "reference"),
+                              ("naive", "naive")]:
+        eng = GXEngine(g, prog, num_shards=1, options=EngineOptions(
+            execution=execution, block_size=256))
+        mw = plug.Middleware(g, prog, daemon=daemon, num_shards=1,
+                             options=plug.PlugOptions(block_size=256))
+        a = eng.run(max_iterations=15).state
+        b = mw.run(max_iterations=15).state
+        np.testing.assert_array_equal(a, b)
+        _compare(ref, a)
