@@ -8,18 +8,61 @@ Competitors (``repro.plug`` daemons behind one ``run_blocks`` contract):
 The paper reports 4–25× for CPU/GPU accelerators; on one CPU core the
 vectorized/jit path plays the accelerator role.
 
+A second table compares the multi-shard schedules at 8 shards on the
+same workloads — ``vectorized`` (8 sequential daemon calls + host
+merge), ``pipelined`` (3-stage overlap per shard), and ``sharded`` (one
+device-resident ``shard_map`` program per iteration over an 8-device
+host mesh; the fused drive loop) — so the acceleration of the
+device-resident path is directly measurable against Fig. 8's baselines.
+
 ``--quick`` runs a reduced matrix and writes the ``BENCH_plug.json``
 tier-2 baseline (scripts/verify.sh --tier2).
+
+Environment note: since the sharded comparison was added, the whole
+process runs on an 8-virtual-device host platform, which also perturbs
+the single-shard naive/blocked/vectorized absolute times (the CPU is
+split between virtual devices).  Baselines are comparable from that
+change onward, not against earlier single-device recordings; the
+``_meta`` block records ``num_devices`` for exactly this reason.
 """
 from __future__ import annotations
 
 import argparse
+import os
 
-from benchmarks.common import DATASETS, save, timeit
-from repro import plug
-from repro.graph.algorithms import label_prop, pagerank, sssp_bf
+# Must precede jax backend init: the sharded comparison wants an 8-device
+# host mesh.  Appended to (not replacing) any pre-set XLA_FLAGS so e.g. a
+# dump flag in the environment doesn't silently shrink the mesh to 1
+# device and mislabel the BENCH_plug.json baseline.
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8").strip()
+
+from benchmarks.common import DATASETS, save, timeit  # noqa: E402
+from repro import plug  # noqa: E402
+from repro.graph.algorithms import label_prop, pagerank, sssp_bf  # noqa: E402
 
 DAEMONS = ("naive", "blocked", "vectorized")
+SHARDED_DAEMONS = ("vectorized", "pipelined", "sharded")
+SHARDS = 8
+
+
+def _per_iter_times(g, prog, iters: int, *, block: int) -> dict:
+    """Steady-state per-iteration wall time per daemon at SHARDS shards
+    (one warmup run excludes compile time; divided by the iterations the
+    run actually executed, in case the workload converges early)."""
+    times = {}
+    for daemon in SHARDED_DAEMONS:
+        mw = plug.Middleware(
+            g, prog, daemon=daemon,
+            upper="mesh" if daemon == "sharded" else "host",
+            num_shards=SHARDS,
+            options=plug.PlugOptions(block_size=block))
+        mw.run(max_iterations=iters)  # warmup: compile
+        res = mw.run(max_iterations=iters)
+        times[daemon] = res.wall_time / max(1, res.iterations)
+    return times
 
 
 def run(small: bool = True, quick: bool = False) -> dict:
@@ -46,15 +89,27 @@ def run(small: bool = True, quick: bool = False) -> dict:
             times[daemon] = timeit(
                 lambda m=mw: m.run(max_iterations=iters[name]),
                 repeat=1, warmup=0)
+        per_iter = _per_iter_times(g, prog, iters[name],
+                                   block=256 if quick else 1024)
         out[name] = {
             **times,
             "speedup_blocked": times["naive"] / times["blocked"],
             "speedup_vectorized": times["naive"] / times["vectorized"],
+            "shards8": {
+                "num_shards": SHARDS,
+                "per_iter_s": per_iter,
+                "speedup_sharded_vs_vectorized":
+                    per_iter["vectorized"] / per_iter["sharded"],
+                "speedup_sharded_vs_pipelined":
+                    per_iter["pipelined"] / per_iter["sharded"],
+            },
         }
+    import jax
     out["_meta"] = {"api": "repro.plug.Middleware", "quick": quick,
                     "graph": {"num_vertices": g.num_vertices,
                               "num_edges": g.num_edges},
-                    "iterations": iters}
+                    "iterations": iters,
+                    "num_devices": len(jax.devices())}
     save("BENCH_plug" if quick else "bench_accel", out)
     return out
 
@@ -70,6 +125,13 @@ def main():
         print(f"{alg:12s} naive={r['naive']:.2f}s blocked={r['blocked']:.2f}s "
               f"vectorized={r['vectorized']:.3f}s "
               f"accel={r['speedup_vectorized']:.1f}x")
+        s8 = r["shards8"]
+        p = s8["per_iter_s"]
+        print(f"{'':12s} @8 shards/iter: vectorized={p['vectorized']*1e3:.1f}ms "
+              f"pipelined={p['pipelined']*1e3:.1f}ms "
+              f"sharded={p['sharded']*1e3:.1f}ms "
+              f"(sharded {s8['speedup_sharded_vs_vectorized']:.1f}x vs "
+              f"vectorized)")
 
 
 if __name__ == "__main__":

@@ -93,6 +93,12 @@ class CapacityEstimator:
             self._c[node] = self.ema * c + (1 - self.ema) * self._c[node]
 
     @property
+    def observed(self) -> bool:
+        """True once at least one real measurement arrived — ``costs``
+        is the all-ones placeholder until then."""
+        return self._c is not None and bool(np.any(~np.isnan(self._c)))
+
+    @property
     def costs(self) -> np.ndarray:
         if self._c is None:
             return np.ones(self.num_nodes)

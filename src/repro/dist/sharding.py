@@ -110,6 +110,28 @@ def _mesh_axes_for(rules: Mapping[str, Sequence[str]], name) -> tuple[str, ...]:
 
 
 # --------------------------------------------------------------------------
+# mesh construction
+# --------------------------------------------------------------------------
+def divisor_mesh(num_items: int, axis: str):
+    """1-D mesh over ``axis`` sized to the largest divisor of
+    ``num_items`` that fits the available devices.
+
+    The shared auto-mesh policy of the graph middleware (``plug``'s
+    ``MeshUpperSystem`` and ``ShardedDaemon``): ``num_items`` stacked
+    slots always divide the mesh axis, so the same code runs 4 shards on
+    1 CPU device (local fold only) and 4 shards on 4 devices (pure
+    collective).
+    """
+    ndev = len(jax.devices())
+    m = 1
+    for d in range(min(num_items, ndev), 0, -1):
+        if num_items % d == 0:
+            m = d
+            break
+    return jax.make_mesh((m,), (axis,))
+
+
+# --------------------------------------------------------------------------
 # spec construction
 # --------------------------------------------------------------------------
 def spec_for(shape: Sequence[int], axes, mesh, rules) -> P:

@@ -19,8 +19,10 @@ Seams and shipped implementations:
 
 =================  =====================================================
 ``daemon=``        ``"reference"``/``"vectorized"`` (fused jnp),
-                   ``"pallas"`` (edge-block kernel), ``"blocked"``,
-                   ``"pipelined"``, ``"naive"``
+                   ``"pallas"`` (edge-block kernel), ``"sharded"``
+                   (all shards as one mesh-sharded program → the
+                   device-resident fused drive loop with ``upper="mesh"``),
+                   ``"blocked"``, ``"pipelined"``, ``"naive"``
 ``upper=``         ``"host"`` (NumPy merge),
                    ``"mesh"`` (shard_map collectives over ``repro.dist``;
                    optional ``wire="compressed"`` int8 aggregate sync)
@@ -35,11 +37,13 @@ package.
 from repro.plug.computation import (BSP, GAS, get_model, model_names,
                                     register_model)
 from repro.plug.daemons import (BlockedDaemon, NaiveDaemon, PipelinedDaemon,
-                                VectorizedDaemon, daemon_names, get_daemon,
-                                register_daemon)
-from repro.plug.middleware import Middleware, make_apply_fn
-from repro.plug.protocols import (ComputationModel, Daemon, PlugOptions,
-                                  Result, UpperSystem)
+                                ShardedDaemon, VectorizedDaemon,
+                                daemon_names, get_daemon, register_daemon)
+from repro.plug.middleware import (DriveLoop, HostDriveLoop, Middleware,
+                                   make_apply_fn)
+from repro.plug.protocols import (ComputationModel, Daemon,
+                                  DevicePartialUpper, PlugOptions, Result,
+                                  ShardCapableDaemon, UpperSystem)
 from repro.plug.reference import run_reference
 from repro.plug.uppers import (HostUpperSystem, MeshUpperSystem,
                                get_upper_system, register_upper_system,
@@ -47,10 +51,11 @@ from repro.plug.uppers import (HostUpperSystem, MeshUpperSystem,
 
 __all__ = [
     "BSP", "GAS", "BlockedDaemon", "ComputationModel", "Daemon",
-    "HostUpperSystem", "MeshUpperSystem", "Middleware", "NaiveDaemon",
-    "PipelinedDaemon", "PlugOptions", "Result", "UpperSystem",
-    "VectorizedDaemon", "daemon_names", "get_daemon", "get_model",
-    "get_upper_system", "make_apply_fn", "model_names", "register_daemon",
-    "register_model", "register_upper_system", "run_reference",
-    "upper_system_names",
+    "DevicePartialUpper", "DriveLoop", "HostDriveLoop", "HostUpperSystem",
+    "MeshUpperSystem", "Middleware", "NaiveDaemon", "PipelinedDaemon",
+    "PlugOptions", "Result", "ShardCapableDaemon", "ShardedDaemon",
+    "UpperSystem", "VectorizedDaemon", "daemon_names", "get_daemon",
+    "get_model", "get_upper_system", "make_apply_fn", "model_names",
+    "register_daemon", "register_model", "register_upper_system",
+    "run_reference", "upper_system_names",
 ]

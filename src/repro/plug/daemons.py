@@ -15,6 +15,13 @@ middleware cannot tell them apart:
   buffers (Sec. III-A); per-stage busy times land in the iteration record.
 * ``NaiveDaemon``       — per-edge host loop; the "upper system without
   accelerator" baseline of Fig. 8.
+* ``ShardedDaemon``     — all shards' block tensors stacked on a leading
+  mesh axis and run as ONE ``shard_map`` program: gather + Gen +
+  segmented Merge + a per-device partial combine, handing (m, N, K)
+  partials to the upper system.  The extra ``bind_shards`` /
+  ``run_all_shards`` capability is feature-detected by the middleware
+  (``plug.protocols.ShardCapableDaemon``) and enables the device-
+  resident fused drive loop (DESIGN.md §3.1).
 
 New backends register with :func:`register_daemon`; see DESIGN.md §3 for
 a worked "write your own daemon" example (a vmapped multi-device daemon
@@ -36,15 +43,44 @@ KERNELS = ("reference", "pallas")
 
 
 # --------------------------------------------------------------------------
-# jitted block programs (shared by the vectorized / blocked / pipelined
-# daemons; fixed shapes in, fixed shapes out, compiled once per bucket)
+# jitted block programs (shared by the vectorized / blocked / pipelined /
+# sharded daemons; fixed shapes in, fixed shapes out, compiled once per
+# bucket)
 # --------------------------------------------------------------------------
+def block_partials(program: VertexProgram, state, aux, vids, lsrc, ldst, w,
+                   emask):
+    """Reference block math: per-block Gen + block-local segmented Merge.
+
+    Traceable (no jit of its own) so the same arithmetic serves the
+    per-shard ``VectorizedDaemon`` and the ``shard_map`` body of
+    ``ShardedDaemon`` — which is what makes the two paths bit-identical
+    for idempotent monoids.
+    """
+    monoid = program.monoid
+    k = program.state_width
+    nb, vb = vids.shape
+    b = lsrc.shape[1]
+    vstate = state[vids]  # (nb, VB, K) gather
+    vaux = aux[vids]
+    s = jnp.take_along_axis(vstate, lsrc[..., None], axis=1)
+    d = jnp.take_along_axis(vstate, ldst[..., None], axis=1)
+    sa = jnp.take_along_axis(vaux, lsrc[..., None], axis=1)
+    msgs = program.msg_gen(
+        s.reshape(nb * b, k), d.reshape(nb * b, k),
+        w.reshape(nb * b, 1), sa.reshape(nb * b, -1)).reshape(nb, b, k)
+    msgs = jnp.where(emask[..., None], msgs, monoid.identity)
+    seg = (ldst + jnp.arange(nb, dtype=ldst.dtype)[:, None] * vb).reshape(-1)
+    partial = monoid.segment_reduce(msgs.reshape(nb * b, k), seg, nb * vb)
+    partial = partial.reshape(nb, vb, k)
+    counts = jax.ops.segment_sum(
+        emask.reshape(-1).astype(jnp.int32), seg, nb * vb).reshape(nb, vb)
+    return partial, counts
+
+
 def make_block_fn(program: VertexProgram, *, kernel: str = "reference"):
     """Per-block Gen + block-local Merge → (nb, VB, K) partials."""
     if kernel not in KERNELS:
         raise ValueError(f"kernel must be one of {KERNELS}, got {kernel!r}")
-    monoid = program.monoid
-    k = program.state_width
 
     if kernel == "pallas":
         from repro.kernels import ops as kops
@@ -59,23 +95,8 @@ def make_block_fn(program: VertexProgram, *, kernel: str = "reference"):
 
     @jax.jit
     def block_fn(state, aux, vids, lsrc, ldst, w, emask):
-        nb, vb = vids.shape
-        b = lsrc.shape[1]
-        vstate = state[vids]  # (nb, VB, K) gather
-        vaux = aux[vids]
-        s = jnp.take_along_axis(vstate, lsrc[..., None], axis=1)
-        d = jnp.take_along_axis(vstate, ldst[..., None], axis=1)
-        sa = jnp.take_along_axis(vaux, lsrc[..., None], axis=1)
-        msgs = program.msg_gen(
-            s.reshape(nb * b, k), d.reshape(nb * b, k),
-            w.reshape(nb * b, 1), sa.reshape(nb * b, -1)).reshape(nb, b, k)
-        msgs = jnp.where(emask[..., None], msgs, monoid.identity)
-        seg = (ldst + jnp.arange(nb, dtype=ldst.dtype)[:, None] * vb).reshape(-1)
-        partial = monoid.segment_reduce(msgs.reshape(nb * b, k), seg, nb * vb)
-        partial = partial.reshape(nb, vb, k)
-        counts = jax.ops.segment_sum(
-            emask.reshape(-1).astype(jnp.int32), seg, nb * vb).reshape(nb, vb)
-        return partial, counts
+        return block_partials(program, state, aux, vids, lsrc, ldst, w,
+                              emask)
 
     return block_fn
 
@@ -94,9 +115,15 @@ def make_combine_fn(program: VertexProgram, n: int):
     return combine
 
 
-def pad_pow2(sel: np.ndarray, nb_total: int) -> np.ndarray:
-    """Pads selected block ids to the next power of two (bounded
-    recompiles); padding is marked -1 and killed via emask in gather."""
+def pad_pow2(sel: np.ndarray) -> np.ndarray:
+    """Pads selected block ids to the next power of two.
+
+    The active-block count changes every iteration; padding it to a
+    power of two bounds the number of distinct ``block_fn`` shapes — and
+    hence XLA recompiles — at ``log2(num_blocks) + 1`` per shard for the
+    whole run.  Padding entries are marked -1 and killed via ``emask``
+    in :func:`gather_blocks`.
+    """
     n = int(sel.size)
     target = 1 << max(0, (n - 1).bit_length())
     if target == n:
@@ -141,12 +168,193 @@ class VectorizedDaemon:
         return self
 
     def run_blocks(self, state, aux, blockset, sel, record):
-        sel_p = pad_pow2(sel, blockset.num_blocks)
+        sel_p = pad_pow2(sel)
         arrs = gather_blocks(blockset, sel_p)
         partial, counts = self.block_fn(jnp.asarray(state), jnp.asarray(aux),
                                         *arrs)
         agg, cnt = self._combine_fn(partial, counts, arrs[0])
         return np.asarray(agg), np.asarray(cnt)
+
+
+class ShardedDaemon(VectorizedDaemon):
+    """Every shard's blocks as ONE sharded device program.
+
+    All shards' block tensors are stacked on a leading axis (padded to a
+    common block count), placed over a mesh axis with
+    ``dist.sharding.sharding_for``, and one ``shard_map`` call per
+    iteration does gather + Gen + segmented Merge *plus a per-device
+    partial combine*: each device folds its shards' block partials into
+    a single (N, K) aggregate before the (m, N, K) per-device partials
+    are handed to the upper system's cross-device collective.
+
+    The extra capability (``bind_shards`` / ``run_all_shards``) is what
+    ``plug.Middleware`` feature-detects to enable the device-resident
+    fused drive loop; ``run_blocks`` is inherited from
+    :class:`VectorizedDaemon`, so with an upper system that cannot merge
+    device partials (``upper="host"``) the same instance simply runs the
+    classic per-shard path.
+    """
+
+    name = "sharded"
+
+    def __init__(self, kernel: str = "reference", mesh=None,
+                 axis: str = "shard"):
+        if kernel != "reference":
+            raise NotImplementedError(
+                "ShardedDaemon runs the reference block math inside its "
+                f"shard_map body; kernel={kernel!r} is not supported yet")
+        super().__init__(kernel)
+        self.mesh = mesh
+        self._auto_mesh = mesh is None
+        self.axis = axis
+        self._stacked = None
+        self._partials_fns: dict = {}
+        self.num_shards = 0
+        self.m = 0
+
+    def bind(self, program: VertexProgram, num_vertices: int):
+        super().bind(program, num_vertices)
+        # a rebind invalidates the stacked layout and compiled bodies
+        self._stacked = None
+        self._partials_fns = {}
+        return self
+
+    @property
+    def stacked(self):
+        """The bound block tensors, stacked and device-placed (a pytree
+        the fused drive loop threads through jit as arguments)."""
+        return self._stacked
+
+    def bind_shards(self, blocksets, *, mesh=None, axis=None):
+        """Stacks + places every shard's block tensors over the mesh axis.
+
+        Shards with fewer blocks are padded with dead blocks (``emask``
+        all-False → identity partials, zero counts), so the stacked
+        layout is rectangular and one compiled program serves all
+        devices.
+        """
+        from repro.dist import sharding as shd
+
+        if axis is not None:
+            self.axis = axis
+        if mesh is not None:
+            self.mesh = mesh
+            self._auto_mesh = False
+        s = len(blocksets)
+        vbs = {bs.vblock_size for bs in blocksets}
+        bbs = {bs.block_size for bs in blocksets}
+        if len(vbs) != 1 or len(bbs) != 1:
+            raise ValueError(
+                "bind_shards needs one (block, vblock) shape across shards; "
+                f"got B={sorted(bbs)} VB={sorted(vbs)}")
+        if self._auto_mesh or self.mesh is None:
+            self.mesh = shd.divisor_mesh(s, self.axis)
+        self.m = self.mesh.shape[self.axis]
+        if s % self.m:
+            raise ValueError(f"num_shards={s} not divisible by mesh axis "
+                             f"{self.axis}={self.m}")
+        self.num_shards = s
+        nb_max = max(bs.num_blocks for bs in blocksets)
+
+        def stack(field, fill=0):
+            arrs = []
+            for bs in blocksets:
+                a = getattr(bs, field)
+                pad = nb_max - a.shape[0]
+                if pad:
+                    a = np.concatenate(
+                        [a, np.full((pad,) + a.shape[1:], fill, a.dtype)])
+                arrs.append(a)
+            return np.stack(arrs)
+
+        rules = {"shards": (self.axis,)}
+
+        def place(a):
+            axes = ("shards",) + (None,) * (a.ndim - 1)
+            return jax.device_put(
+                a, shd.sharding_for(a.shape, axes, self.mesh, rules))
+
+        self._stacked = {
+            "vids": place(stack("vids")),
+            "lsrc": place(stack("lsrc")),
+            "ldst": place(stack("ldst")),
+            "weights": place(stack("weights")),
+            "emask": place(stack("emask", fill=False)),
+            "gsrc": place(stack("gsrc")),
+        }
+        self._partials_fns = {}
+        return self
+
+    def _partials_fn(self, use_frontier: bool):
+        try:
+            return self._partials_fns[use_frontier]
+        except KeyError:
+            pass
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        program = self.program
+        monoid = program.monoid
+        n = self.n
+        k = program.state_width
+
+        def body(state, aux, active, vids, lsrc, ldst, w, emask, gsrc):
+            # local slices (S/m, nb, …); state/aux/active replicated
+            s_l, nb, vb = vids.shape
+            b = lsrc.shape[2]
+            if use_frontier:
+                # same block granularity as the host path: a block with
+                # no active source contributes nothing this iteration
+                blk_active = jnp.any(active[gsrc] & emask, axis=2)
+                emask = emask & blk_active[..., None]
+            else:
+                blk_active = jnp.any(emask, axis=2)
+            partial, counts = block_partials(
+                program, state, aux,
+                vids.reshape(s_l * nb, vb), lsrc.reshape(s_l * nb, b),
+                ldst.reshape(s_l * nb, b), w.reshape(s_l * nb, b, 1),
+                emask.reshape(s_l * nb, b))
+            # per-device partial combine: all of this device's shard/block
+            # partials fold to one (N, K) aggregate before the upper
+            # system's cross-device collective
+            flat_ids = vids.reshape(-1)
+            agg = monoid.segment_reduce(partial.reshape(-1, k), flat_ids, n)
+            cnt = jax.ops.segment_sum(counts.reshape(-1), flat_ids, n)
+            return (agg[None], cnt[None],
+                    blk_active.sum(axis=1).astype(jnp.int32))
+
+        spec = P(self.axis)
+        rep = P()
+        fn = shard_map(
+            body, mesh=self.mesh,
+            in_specs=(rep, rep, rep, spec, spec, spec, spec, spec, spec),
+            out_specs=(spec, spec, spec), check_rep=False)
+        self._partials_fns[use_frontier] = fn
+        return fn
+
+    def run_all_shards(self, state, aux, active=None, *, stacked=None):
+        """Gen + Merge for ALL shards as one sharded program (traceable).
+
+        Args:
+          state, aux: the (replicated) global vertex table.
+          active: (N,) bool frontier for block skipping, or None to run
+            every block (non-frontier programs).
+          stacked: the ``self.stacked`` pytree threaded through as jit
+            arguments (the fused drive loop does this so the block
+            tensors are not baked into the compiled step as constants).
+        Returns:
+          ``(partials (m, N, K), counts (m, N), blocks_run (S,))`` —
+          device-resident, leading axes sharded over the mesh axis.
+        """
+        st = self._stacked if stacked is None else stacked
+        if st is None:
+            raise RuntimeError(
+                "ShardedDaemon.run_all_shards called before bind_shards")
+        fn = self._partials_fn(active is not None)
+        if active is None:
+            active = jnp.zeros((1,), jnp.bool_)  # placeholder, unread
+        return fn(state, aux, active, st["vids"], st["lsrc"], st["ldst"],
+                  st["weights"], st["emask"], st["gsrc"])
 
 
 class _StreamingDaemon:
@@ -285,6 +493,7 @@ register_daemon("reference", functools.partial(VectorizedDaemon,
                                                kernel="reference"))
 register_daemon("pallas", functools.partial(VectorizedDaemon,
                                             kernel="pallas"))
+register_daemon("sharded", ShardedDaemon)
 register_daemon("blocked", BlockedDaemon)
 register_daemon("pipelined", PipelinedDaemon)
 register_daemon("naive", NaiveDaemon)

@@ -1,15 +1,37 @@
-"""The middleware: agents + drive loop composed from the three protocols.
+"""The middleware: agents + drive loops composed from the three protocols.
 
 ``Middleware`` owns exactly what the paper's *agent* role owns — per-shard
 host state (vertex table replicas, LRU boundary caches, block sets, byte
 accounting) and the iteration drive loop — and delegates everything else:
 
 * device compute to the :class:`~repro.plug.protocols.Daemon`
-  (``daemon.run_blocks`` per shard per iteration),
+  (``daemon.run_blocks`` per shard per iteration, or one
+  ``daemon.run_all_shards`` sharded program for all shards at once),
 * partitioning / exchange planning / the global merge to the
   :class:`~repro.plug.protocols.UpperSystem`,
 * Gen/Merge/Apply ordering to the
   :class:`~repro.plug.protocols.ComputationModel`.
+
+Two drive loops implement the iteration:
+
+* :class:`HostDriveLoop` — the classic per-shard path: every iteration
+  calls each shard's daemon, materializes aggregates on the host,
+  runs the candidate apply for skip detection, and the upper system's
+  global merge.  Full byte/cache accounting lives here.
+* :class:`DriveLoop` — the device-resident fused path, feature-detected
+  when the daemon can :meth:`run_all_shards`
+  (:class:`~repro.plug.protocols.ShardCapableDaemon`) *and* the upper
+  system can :meth:`merge_partials`
+  (:class:`~repro.plug.protocols.DevicePartialUpper`) over an exact
+  wire: one jitted step per iteration fuses gather + Gen + segmented
+  Merge + the cross-device collective + Apply + the convergence check,
+  and vertex state never leaves the mesh between iterations.
+
+Lemma-2 capacity-aware block assignment (paper Sec. III-C) plugs in at
+partition time: ``Middleware(capacities=...)`` sizes shards with
+``core.balance.lemma2_fractions`` so the mesh axis is makespan-balanced,
+and :meth:`Middleware.rebalance` re-runs the assignment from per-shard
+busy times observed in the iteration records.
 
 No backend, upper-system, or model names appear below — components are
 resolved once in ``__init__`` (strings go through the registries) and
@@ -26,14 +48,37 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pipeline as pl
+from repro.core.balance import CapacityEstimator, lemma2_fractions
 from repro.core.blocks import build_blocks
 from repro.core.sync import LRUVertexCache, SyncStats, can_skip_sync
 from repro.core.template import VertexProgram
 from repro.graph.structure import EdgePartition, Graph
-from repro.plug.computation import get_model
+from repro.plug.computation import BSP, GAS, get_model
 from repro.plug.daemons import get_daemon
-from repro.plug.protocols import PlugOptions, Result
+from repro.plug.protocols import (DevicePartialUpper, PlugOptions, Result,
+                                  ShardCapableDaemon)
 from repro.plug.uppers import get_upper_system
+
+# Computation-model orders the fused loop may realize.  BSP and GAS
+# produce identical state trajectories on the same template (paper
+# Sec. IV-B2; ``plug.computation`` docstring), so one fused step serves
+# both; anything else falls back to the host loop, which drives the
+# model's hooks verbatim.
+_FUSABLE_ORDERS = {("gen", "merge", "apply"), ("merge", "apply", "gen")}
+_MODEL_HOOKS = ("prologue", "aggregates", "epilogue")
+
+
+def _model_is_fusable(model) -> bool:
+    """True iff the model's trajectory is the one the fused step realizes:
+    a BSP/GAS order AND the three hooks exactly as BSP or GAS implements
+    them — a subclass overriding any hook (delta caching, priority
+    scheduling, …) must keep the host loop that calls its hooks."""
+    if tuple(getattr(model, "order", ())) not in _FUSABLE_ORDERS:
+        return False
+    cls = type(model)
+    return any(
+        all(getattr(cls, h, None) is getattr(base, h) for h in _MODEL_HOOKS)
+        for base in (BSP, GAS))
 
 
 def make_apply_fn(program: VertexProgram):
@@ -54,12 +99,16 @@ class Middleware:
     Args:
       graph, program: the workload.
       daemon: accelerator backend — a registry name (``"reference"``,
-        ``"pallas"``, ``"blocked"``, ``"pipelined"``, ``"naive"``, …) or
-        an unbound Daemon instance.
+        ``"pallas"``, ``"sharded"``, ``"blocked"``, ``"pipelined"``,
+        ``"naive"``, …) or an unbound Daemon instance.
       upper: upper system — ``"host"`` / ``"mesh"`` or an instance.
       model: computation model — ``"bsp"`` / ``"gas"`` or an instance.
       partitions: explicit edge partitions; defaults to the upper
         system's partitioner over ``num_shards``.
+      capacities: per-shard per-entity costs c_j (seconds/entity, any
+        positive scale); shard sizes follow Lemma 2 so the slowest
+        shard is no longer the makespan (paper Sec. III-C Case 1).
+        Ignored when explicit ``partitions`` are given.
       options: :class:`~repro.plug.protocols.PlugOptions`.
     """
 
@@ -73,6 +122,7 @@ class Middleware:
         model="bsp",
         partitions: list[EdgePartition] | None = None,
         num_shards: int = 1,
+        capacities=None,
         options: PlugOptions | None = None,
     ):
         self.graph = graph
@@ -83,30 +133,35 @@ class Middleware:
                       else upper)
         self.model = get_model(model) if isinstance(model, str) else model
 
+        self._owns_partitions = partitions is None
         if partitions is None:
-            partitions = self.upper.partition(graph, num_shards)
+            if capacities is not None:
+                c = np.asarray(capacities, dtype=np.float64)
+                if c.shape != (num_shards,):
+                    raise ValueError(
+                        f"capacities must have shape ({num_shards},), got "
+                        f"{c.shape}")
+                partitions = self.upper.partition(
+                    graph, num_shards, fractions=lemma2_fractions(c))
+            else:
+                partitions = self.upper.partition(graph, num_shards)
         self.partitions = list(partitions)
         self.num_shards = len(self.partitions)
         self.n = graph.num_vertices
         self.k = program.state_width
-
-        b = self._resolve_block_size()
-        self.block_size = b
-        self.blocksets = [build_blocks(p, b) for p in self.partitions]
-        # One vertex-block width for all shards → one compiled daemon program.
-        vb = max(bs.vblock_size for bs in self.blocksets)
-        self.blocksets = [build_blocks(p, b, vblock_size=vb)
-                          for p in self.partitions]
-        self.vblock_size = vb
+        self._setup_blocks()
 
         self.daemon.bind(program, self.n)
         self.upper.bind(program, self.num_shards)
         self._apply_fn = make_apply_fn(program)
         self.stats = SyncStats()
-        self._caches = [
-            LRUVertexCache(self.options.cache_capacity)
-            for _ in range(self.num_shards)
-        ]
+        self._caches: list[LRUVertexCache] = []  # created per-run by run()
+        self._estimator = CapacityEstimator(self.num_shards)
+        self._fused = self._detect_fused()
+        if self._fused:
+            self.daemon.bind_shards(self.blocksets, mesh=self.upper.mesh,
+                                    axis=self.upper.axis)
+        self._loop = None
 
     # -- setup ------------------------------------------------------------
     def _resolve_block_size(self) -> int:
@@ -117,13 +172,120 @@ class Middleware:
             return int(min(max(best_b, 64), 1 << 16))
         return int(o.block_size)
 
+    def _setup_blocks(self) -> None:
+        b = self._resolve_block_size()
+        self.block_size = b
+        self.blocksets = [build_blocks(p, b) for p in self.partitions]
+        # One vertex-block width for all shards → one compiled daemon program.
+        vb = max(bs.vblock_size for bs in self.blocksets)
+        self.blocksets = [build_blocks(p, b, vblock_size=vb)
+                          for p in self.partitions]
+        self.vblock_size = vb
+
+    def _detect_fused(self) -> bool:
+        """The fused device-resident loop needs three capabilities: a
+        shard-capable daemon, an upper system that merges device
+        partials over an exact wire, and a computation-model order the
+        fused step realizes (BSP/GAS — identical trajectories)."""
+        return (isinstance(self.daemon, ShardCapableDaemon)
+                and isinstance(self.upper, DevicePartialUpper)
+                and getattr(self.upper, "wire", "exact") == "exact"
+                and _model_is_fusable(self.model))
+
+    # -- the drive loop ---------------------------------------------------
+    def run(self, max_iterations: int | None = None) -> Result:
+        # Fresh per-run accounting: stats and LRU caches reset at loop
+        # entry (regression: a second run() on the same instance reported
+        # inflated cache/byte/round counters).
+        self.stats = SyncStats()
+        self._caches = [
+            LRUVertexCache(self.options.cache_capacity)
+            for _ in range(self.num_shards)
+        ]
+        if self._loop is None:
+            self._loop = (DriveLoop(self) if self._fused
+                          else HostDriveLoop(self))
+        return self._loop.run(max_iterations)
+
+    # -- Lemma-2 rebalancing ----------------------------------------------
+    def rebalance(self, capacities=None) -> np.ndarray:
+        """Capacity-aware re-assignment of blocks to shards (Lemma 2).
+
+        Uses explicit per-entity costs when given; otherwise the costs
+        the :class:`~repro.core.balance.CapacityEstimator` learned from
+        per-shard busy times in the iteration records (the host loop
+        feeds it ``shard_busy_s`` / ``shard_entities`` every iteration).
+        Re-partitions the graph with ``lemma2_fractions``, rebuilds the
+        block sets, re-places the sharded daemon's block tensors, and
+        returns the fractions used.
+
+        The fused drive loop runs every shard inside one device program,
+        so it observes no per-shard busy times — rebalancing a
+        fused-only middleware requires explicit ``capacities`` (raises
+        otherwise rather than silently re-partitioning uniformly).
+        Likewise, a middleware built on caller-supplied ``partitions``
+        refuses to rebalance: re-partitioning would silently replace the
+        caller's partitioning strategy with the upper system's default.
+        """
+        if not self._owns_partitions:
+            raise ValueError(
+                "rebalance() would replace the explicit partitions this "
+                "Middleware was constructed with by the upper system's "
+                "default partitioner; construct without partitions= (or "
+                "with capacities=) to let the middleware own the "
+                "assignment")
+        if capacities is not None:
+            c = np.asarray(capacities, dtype=np.float64)
+            if c.shape != (self.num_shards,):
+                raise ValueError(
+                    f"capacities must have shape ({self.num_shards},), got "
+                    f"{c.shape}")
+        elif not self._estimator.observed:
+            raise ValueError(
+                "rebalance() has no observed per-shard busy times (the "
+                "fused drive loop times all shards as one program) — pass "
+                "capacities= explicitly, or run the host path first")
+        else:
+            c = self._estimator.costs
+        fractions = lemma2_fractions(c)
+        self.partitions = list(self.upper.partition(
+            self.graph, self.num_shards, fractions=fractions))
+        self._setup_blocks()
+        self.daemon.bind(self.program, self.n)
+        self.upper.bind(self.program, self.num_shards)
+        if self._fused:
+            self.daemon.bind_shards(self.blocksets, mesh=self.upper.mesh,
+                                    axis=self.upper.axis)
+        self._loop = None
+        return fractions
+
+
+class HostDriveLoop:
+    """The per-shard host path: exact legacy ``Middleware.run`` semantics.
+
+    Aggregates round-trip through the host every iteration; in exchange
+    this loop carries the paper's full inter-iteration machinery — LRU
+    boundary caches, lazy-upload byte accounting, candidate apply +
+    synchronization skipping — plus per-shard busy-time records feeding
+    the Lemma-2 capacity estimator.
+    """
+
+    def __init__(self, mw: Middleware):
+        self.mw = mw
+        # active-set size buckets already compiled (shared across shards:
+        # one block_fn serves them all) — first sight of a bucket pays the
+        # XLA compile inside the busy-time window and must not reach the
+        # capacity estimator
+        self._seen_buckets: set[int] = set()
+
     # -- one shard's Gen + per-block Merge ---------------------------------
     def _shard_aggregate(self, j: int, state_j: np.ndarray, aux: np.ndarray,
                          active_j: np.ndarray | None, record: dict):
         """Agent work for shard j → (N,K) aggregate, (N,) counts, read ids."""
-        bs = self.blocksets[j]
-        o = self.options
-        if (self.program.frontier_driven and o.frontier_block_skipping
+        mw = self.mw
+        bs = mw.blocksets[j]
+        o = mw.options
+        if (mw.program.frontier_driven and o.frontier_block_skipping
                 and active_j is not None):
             blk_active = np.any(active_j[bs.gsrc] & bs.emask, axis=1)
             sel = np.nonzero(blk_active)[0]
@@ -132,38 +294,55 @@ class Middleware:
         record["blocks_total"] = record.get("blocks_total", 0) + bs.num_blocks
         record["blocks_run"] = record.get("blocks_run", 0) + int(sel.size)
         if sel.size == 0:
-            agg = np.full((self.n, self.k), self.program.monoid.identity,
+            agg = np.full((mw.n, mw.k), mw.program.monoid.identity,
                           np.float32)
-            return agg, np.zeros(self.n, np.int32), np.empty(0, np.int64)
+            return agg, np.zeros(mw.n, np.int32), np.empty(0, np.int64)
 
         # LRU cache accounting for boundary reads (Sec. III-B2).
         read_ids = np.unique(bs.gsrc[sel][bs.emask[sel]])
-        boundary_reads = read_ids[self.partitions[j].boundary_mask[read_ids]]
-        rowbytes = 4 * self.k + 8
+        boundary_reads = read_ids[mw.partitions[j].boundary_mask[read_ids]]
+        rowbytes = 4 * mw.k + 8
         if o.sync_caching:
-            cache = self._caches[j]
+            cache = mw._caches[j]
             hit = cache.lookup(boundary_reads.astype(np.int64))
             cache.insert(boundary_reads[~hit].astype(np.int64))
-            self.stats.cache_hits += int(hit.sum())
-            self.stats.cache_misses += int((~hit).sum())
-            self.stats.download_bytes_cache += int((~hit).sum()) * rowbytes
-        self.stats.download_bytes_nocache += int(boundary_reads.size) * rowbytes
+            mw.stats.cache_hits += int(hit.sum())
+            mw.stats.cache_misses += int((~hit).sum())
+            mw.stats.download_bytes_cache += int((~hit).sum()) * rowbytes
+        mw.stats.download_bytes_nocache += int(boundary_reads.size) * rowbytes
 
-        agg, cnt = self.daemon.run_blocks(state_j, aux, bs, sel, record)
-        return np.asarray(agg), np.asarray(cnt), read_ids
+        bucket = 1 << max(0, (int(sel.size) - 1).bit_length())
+        compiling = bucket not in self._seen_buckets
+        self._seen_buckets.add(bucket)
+        t_busy = time.perf_counter()
+        agg, cnt = mw.daemon.run_blocks(state_j, aux, bs, sel, record)
+        agg, cnt = np.asarray(agg), np.asarray(cnt)
+        busy = time.perf_counter() - t_busy
+        entities = int(sel.size) * bs.block_size
+        shards = mw.num_shards
+        record.setdefault("shard_busy_s", [0.0] * shards)[j] += busy
+        record.setdefault("shard_entities", [0] * shards)[j] += entities
+        # Fed here, not from the record at iteration end (GAS gathers in
+        # prologue/epilogue, where the consuming record differs) — and
+        # only for steady-state buckets: a first-seen padded size pays
+        # one-off XLA compilation inside the window, which would inflate
+        # this shard's EMA'd cost by orders of magnitude.
+        if not compiling:
+            mw._estimator.update(j, entities, busy)
+        return agg, cnt, read_ids
 
-    # -- the drive loop -----------------------------------------------------
     def run(self, max_iterations: int | None = None) -> Result:
-        prog = self.program
-        o = self.options
-        self.upper.reset()
+        mw = self.mw
+        prog = mw.program
+        o = mw.options
+        mw.upper.reset()
         max_it = max_iterations or prog.max_iterations
-        state0, aux = prog.init(self.graph)
-        states = [state0.copy() for _ in range(self.num_shards)]
-        actives = [np.ones(self.n, dtype=bool) for _ in range(self.num_shards)]
+        state0, aux = prog.init(mw.graph)
+        states = [state0.copy() for _ in range(mw.num_shards)]
+        actives = [np.ones(mw.n, dtype=bool) for _ in range(mw.num_shards)]
         skip_ok = o.sync_skipping and prog.supports_sync_skipping()
         per_iter: list[dict] = []
-        rowbytes = 4 * self.k + 8
+        rowbytes = 4 * mw.k + 8
         t0 = time.perf_counter()
         it = 0
         converged = False
@@ -171,16 +350,16 @@ class Middleware:
         def gather(rec: dict):
             return [
                 self._shard_aggregate(j, states[j], aux, actives[j], rec)
-                for j in range(self.num_shards)
+                for j in range(mw.num_shards)
             ]
 
-        pending = self.model.prologue(gather)
+        pending = mw.model.prologue(gather)
 
         for it in range(1, max_it + 1):
             rec: dict = {"iteration": it}
-            for c in self._caches:
+            for c in mw._caches:
                 c.tick()
-            results = self.model.aggregates(gather, pending, rec)
+            results = mw.model.aggregates(gather, pending, rec)
             pending = None
 
             aggs = [r[0] for r in results]
@@ -188,8 +367,8 @@ class Middleware:
 
             # Local candidate apply (needed for skip detection).
             new_states, new_actives, updated_ids = [], [], []
-            for j in range(self.num_shards):
-                ns, act = self._apply_fn(
+            for j in range(mw.num_shards):
+                ns, act = mw._apply_fn(
                     jnp.asarray(states[j]), jnp.asarray(aggs[j]),
                     jnp.asarray(cnts[j] > 0), jnp.asarray(aux), it)
                 ns, act = np.asarray(ns), np.asarray(act)
@@ -197,14 +376,14 @@ class Middleware:
                 new_actives.append(act)
                 updated_ids.append(np.nonzero(act)[0])
 
-            boundary_masks = [p.boundary_mask for p in self.partitions]
-            skipped = skip_ok and self.num_shards > 1 and can_skip_sync(
+            boundary_masks = [p.boundary_mask for p in mw.partitions]
+            skipped = skip_ok and mw.num_shards > 1 and can_skip_sync(
                 updated_ids, boundary_masks)
-            self.stats.rounds_total += 1
+            mw.stats.rounds_total += 1
             rec["skipped"] = bool(skipped)
 
             if skipped:
-                self.stats.rounds_skipped += 1
+                mw.stats.rounds_skipped += 1
                 states = new_states
                 actives = new_actives
             else:
@@ -218,44 +397,133 @@ class Middleware:
             if all(a.sum() == 0 for a in actives):
                 converged = True
                 break
-            pending = self.model.epilogue(gather, rec)
+            pending = mw.model.epilogue(gather, rec)
 
-        final = self.upper.resolve(states)
+        final = mw.upper.resolve(states)
         return Result(
             state=final,
             iterations=it,
             converged=converged,
-            stats=self.stats,
+            stats=mw.stats,
             wall_time=time.perf_counter() - t0,
             per_iteration=per_iter,
         )
 
     def _global_sync(self, states, aggs, cnts, aux, it,
                      updated_ids, boundary_masks, rowbytes, rec):
-        o = self.options
+        mw = self.mw
+        o = mw.options
         # Byte accounting: dense exchange vs lazy upload (Alg. 3).
-        self.stats.dense_bytes += self.num_shards * self.n * self.k * 4
+        mw.stats.dense_bytes += mw.num_shards * mw.n * mw.k * 4
         queried = []
-        for j in range(self.num_shards):
-            reads = np.unique(self.blocksets[j].gsrc[self.blocksets[j].emask])
+        for j in range(mw.num_shards):
+            reads = np.unique(mw.blocksets[j].gsrc[mw.blocksets[j].emask])
             queried.append(reads[boundary_masks[j][reads]].astype(np.int64))
         upd_boundary = [
             u[boundary_masks[j][u]].astype(np.int64)
             for j, u in enumerate(updated_ids)
         ]
-        gqq, uploads = self.upper.exchange(upd_boundary, queried)
-        self.stats.lazy_bytes += int(sum(u.size for u in uploads)) * rowbytes
-        self.stats.lazy_bytes += int(gqq.size) * 8  # query-queue broadcast
+        gqq, uploads = mw.upper.exchange(upd_boundary, queried)
+        mw.stats.lazy_bytes += int(sum(u.size for u in uploads)) * rowbytes
+        mw.stats.lazy_bytes += int(gqq.size) * 8  # query-queue broadcast
         if o.sync_caching:
             changed = np.unique(np.concatenate([u for u in uploads] or
                                                [np.empty(0, np.int64)]))
-            for c in self._caches:
+            for c in mw._caches:
                 c.invalidate(changed)
 
-        base, agg, cnt = self.upper.merge(states, aggs, cnts)
-        ns, act = self._apply_fn(jnp.asarray(base), jnp.asarray(agg),
-                                 jnp.asarray(cnt) > 0, jnp.asarray(aux), it)
+        base, agg, cnt = mw.upper.merge(states, aggs, cnts)
+        ns, act = mw._apply_fn(jnp.asarray(base), jnp.asarray(agg),
+                               jnp.asarray(cnt) > 0, jnp.asarray(aux), it)
         ns, act = np.asarray(ns), np.asarray(act)
-        return [ns.copy() for _ in range(self.num_shards)], [
-            act.copy() for _ in range(self.num_shards)
+        return [ns.copy() for _ in range(mw.num_shards)], [
+            act.copy() for _ in range(mw.num_shards)
         ]
+
+
+class DriveLoop:
+    """Device-resident fused drive loop (the sharded fast path).
+
+    One jitted step per iteration composes the sharded daemon's
+    gather + Gen + segmented Merge ``shard_map``, the upper system's
+    cross-device partial merge, Apply, and the convergence check into a
+    single device program.  Vertex state and the frontier stay resident
+    on the mesh between iterations; only scalars (converged flag, active
+    count) and the tiny per-shard blocks-run vector cross to the host,
+    and the final state is materialized exactly once after the loop.
+
+    Because the collective merge is *inside* every step, shard replicas
+    never diverge: there is no candidate apply, no sync round to skip,
+    and no host download to LRU-cache — those host-economy options are
+    inert here by construction (``stats`` carries ``rounds_total``
+    only).  The :class:`HostDriveLoop` remains the path with full byte
+    accounting and is what daemons without ``run_all_shards`` fall back
+    to.
+    """
+
+    def __init__(self, mw: Middleware):
+        self.mw = mw
+        self._step = None
+
+    def _build_step(self):
+        mw = self.mw
+        daemon, upper, apply_fn = mw.daemon, mw.upper, mw._apply_fn
+        use_frontier = (mw.program.frontier_driven
+                        and mw.options.frontier_block_skipping)
+
+        def step(state, active, aux, it, stacked):
+            partials, counts, blocks_run = daemon.run_all_shards(
+                state, aux, active if use_frontier else None,
+                stacked=stacked)
+            agg, cnt = upper.merge_partials(partials, counts)
+            # base == state: replicas are merged every step, never diverge
+            new_state, new_active = apply_fn(state, agg, cnt > 0, aux, it)
+            n_active = new_active.sum()
+            return new_state, new_active, n_active == 0, n_active, blocks_run
+
+        return jax.jit(step)
+
+    def run(self, max_iterations: int | None = None) -> Result:
+        mw = self.mw
+        prog = mw.program
+        mw.upper.reset()
+        max_it = max_iterations or prog.max_iterations
+        state0, aux = prog.init(mw.graph)
+        rep = jax.sharding.NamedSharding(mw.daemon.mesh,
+                                         jax.sharding.PartitionSpec())
+        state = jax.device_put(state0, rep)
+        aux_dev = jax.device_put(aux, rep)
+        active = jax.device_put(np.ones(mw.n, dtype=bool), rep)
+        stacked = mw.daemon.stacked
+        if self._step is None:
+            self._step = self._build_step()
+        blocks_total = int(sum(bs.num_blocks for bs in mw.blocksets))
+        per_iter: list[dict] = []
+        t0 = time.perf_counter()
+        it = 0
+        converged = False
+
+        for it in range(1, max_it + 1):
+            state, active, done, n_active, blocks_run = self._step(
+                state, active, aux_dev, jnp.int32(it), stacked)
+            mw.stats.rounds_total += 1
+            shard_blocks = [int(x) for x in jax.device_get(blocks_run)]
+            rec = {"iteration": it, "fused": True,
+                   "blocks_total": blocks_total,
+                   "blocks_run": int(sum(shard_blocks)),
+                   "shard_blocks_run": shard_blocks,
+                   "active": int(n_active)}
+            per_iter.append(rec)
+            if bool(done):
+                converged = True
+                break
+
+        final = np.asarray(state)  # the run's single device→host transfer
+        return Result(
+            state=final,
+            iterations=it,
+            converged=converged,
+            stats=mw.stats,
+            wall_time=time.perf_counter() - t0,
+            per_iteration=per_iter,
+        )

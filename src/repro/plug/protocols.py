@@ -98,12 +98,47 @@ class Daemon(Protocol):
 
 
 @runtime_checkable
+class ShardCapableDaemon(Protocol):
+    """Optional daemon capability: run EVERY shard as one device program.
+
+    A daemon additionally exposing these two methods (``ShardedDaemon``
+    does) is feature-detected by the middleware, which then switches to
+    the device-resident fused drive loop: per-iteration state never
+    round-trips through the host, and the daemon hands (m, N, K)
+    per-device partials straight to the upper system's collective merge
+    (see DESIGN.md §3.1).  Daemons without the capability run the
+    classic per-shard ``run_blocks`` path — nothing else changes.
+
+    The structural check covers everything the fused drive loop touches:
+    the two methods plus ``mesh`` (the mesh the stacked block tensors
+    live on after ``bind_shards``; the loop replicates state over it)
+    and ``stacked`` (the placed block-tensor pytree the loop threads
+    through jit as arguments).
+    """
+
+    mesh: object
+    stacked: object
+
+    def bind_shards(self, blocksets, *, mesh=None, axis=None):
+        """Stacks + places all shards' block tensors over a mesh axis."""
+        ...
+
+    def run_all_shards(self, state, aux, active=None, *, stacked=None):
+        """Traceable: all shards' Gen + Merge + per-device combine →
+        ``(partials (m, N, K), counts (m, N), blocks_run (S,))``."""
+        ...
+
+
+@runtime_checkable
 class UpperSystem(Protocol):
     """Distributed-system side: partition, exchange, global merge."""
 
     name: str
 
-    def partition(self, graph: Graph, num_shards: int) -> List[EdgePartition]:
+    def partition(self, graph: Graph, num_shards: int,
+                  fractions: np.ndarray | None = None) -> List[EdgePartition]:
+        """Partitions edges into shards; ``fractions`` (summing to 1)
+        requests capacity-aware shard sizes (Lemma 2, Sec. III-C)."""
         ...
 
     def bind(self, program: VertexProgram, num_shards: int) -> "UpperSystem":
@@ -125,6 +160,27 @@ class UpperSystem(Protocol):
 
     def resolve(self, states: List[np.ndarray]) -> np.ndarray:
         """Final answer from per-shard state replicas."""
+        ...
+
+
+@runtime_checkable
+class DevicePartialUpper(Protocol):
+    """Optional upper-system capability: merge device-resident partials.
+
+    ``merge_partials`` must be traceable (callable inside jit): it takes
+    the (m, N, K) / (m, N) per-device partials a sharded daemon produced
+    — already on the mesh, never re-``device_put`` — and reduces them
+    across the mesh axis to a replicated ``(agg (N, K), cnt (N,))``.
+    The middleware requires this capability (plus an exact wire) to
+    activate the fused drive loop, and hands the upper's ``mesh`` /
+    ``axis`` to the daemon's ``bind_shards`` so both halves of the fused
+    step live on the same device mesh.
+    """
+
+    mesh: object
+    axis: str
+
+    def merge_partials(self, partials, counts):
         ...
 
 

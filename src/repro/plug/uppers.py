@@ -35,8 +35,10 @@ class HostUpperSystem:
 
     name = "host"
 
-    def partition(self, graph: Graph, num_shards: int):
-        return partition_contiguous(graph, num_shards)
+    def partition(self, graph: Graph, num_shards: int, fractions=None):
+        """Contiguous edge ranges; ``fractions`` (e.g. from
+        ``core.balance.lemma2_fractions``) sizes shards capacity-aware."""
+        return partition_contiguous(graph, num_shards, fractions)
 
     def bind(self, program: VertexProgram, num_shards: int):
         self.program = program
@@ -110,6 +112,7 @@ class MeshUpperSystem(HostUpperSystem):
         self.wire = wire
         self.bits = bits
         self._merge_fn = None
+        self._pmerge_fn = None
         self._allreduce = None
         self._residual = None
         self.wire_stats = {"exact_bytes": 0, "compressed_bytes": 0}
@@ -121,6 +124,7 @@ class MeshUpperSystem(HostUpperSystem):
         # Rebinding (a reused instance in a new Middleware) must not keep
         # compiled fns or residuals built for the previous shard layout.
         self._merge_fn = None
+        self._pmerge_fn = None
         self._allreduce = None
         self._residual = None
         if self.wire == "compressed" and program.monoid.idempotent:
@@ -128,13 +132,9 @@ class MeshUpperSystem(HostUpperSystem):
                 "wire='compressed' quantizes a summed aggregate; idempotent "
                 "(min/max) merges must use wire='exact'")
         if self._auto_mesh:
-            ndev = len(jax.devices())
-            m = 1
-            for d in range(min(num_shards, ndev), 0, -1):
-                if num_shards % d == 0:
-                    m = d
-                    break
-            self.mesh = jax.make_mesh((m,), (self.axis,))
+            from repro.dist.sharding import divisor_mesh
+
+            self.mesh = divisor_mesh(num_shards, self.axis)
         self.m = self.mesh.shape[self.axis]
         if num_shards % self.m:
             raise ValueError(f"num_shards={num_shards} not divisible by "
@@ -197,12 +197,25 @@ class MeshUpperSystem(HostUpperSystem):
                        out_specs=(P(), P(), P()), check_rep=False)
         return jax.jit(fn)
 
+    def _ensure_placed(self, arrs, dtype=None):
+        """Stacks + places per-shard numpy arrays; an already-stacked
+        device-resident jax.Array (e.g. partials a sharded daemon left on
+        the mesh) passes through untouched — no re-``device_put``."""
+        import jax
+
+        if isinstance(arrs, jax.Array):
+            return arrs
+        stacked = np.stack([np.asarray(a) for a in arrs])
+        if dtype is not None:
+            stacked = stacked.astype(dtype)
+        return self._place(stacked)
+
     def merge(self, states, aggs, cnts):
         s = len(states)
         compressed = self.wire == "compressed"
-        stacked_s = self._place(np.stack(states))
-        stacked_a = self._place(np.stack(aggs))
-        stacked_c = self._place(np.stack(cnts).astype(np.int32))
+        stacked_s = self._ensure_placed(states)
+        stacked_a = self._ensure_placed(aggs)
+        stacked_c = self._ensure_placed(cnts, dtype=np.int32)
         if self._merge_fn is None:
             self._merge_fn = self._build_merge(s // self.m,
                                                with_agg=not compressed)
@@ -232,6 +245,49 @@ class MeshUpperSystem(HostUpperSystem):
         # every row of the (m, N, K) output equals the mean of the m
         # per-device partials; sum = mean × m
         return jnp.asarray(np.asarray(means)[0] * self.m)
+
+    # -- device-resident partial merge (the fused drive loop's half) -------
+    def _build_pmerge(self):
+        import jax
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        monoid = self.monoid
+        axis = self.axis
+
+        def block(ag, cn):
+            # ag: (1, N, K) this device's partial; cn: (1, N)
+            ag_l, cn_l = ag[0], cn[0]
+            if monoid.idempotent:
+                red = jax.lax.pmin if monoid.name == "min" else jax.lax.pmax
+                agg = red(ag_l, axis)
+            else:
+                agg = jax.lax.psum(ag_l, axis)
+            cnt = jax.lax.psum(cn_l, axis)
+            return agg, cnt
+
+        spec = P(self.axis)
+        return shard_map(block, mesh=self.mesh, in_specs=(spec, spec),
+                         out_specs=(P(), P()), check_rep=False)
+
+    def merge_partials(self, partials, counts):
+        """Reduces device-resident (m, N, K) / (m, N) per-device partials
+        across the mesh axis → replicated ``(agg, cnt)``.
+
+        Traceable: the fused drive loop calls this inside its jitted
+        step, composing the daemon's ``shard_map`` with this collective
+        into one device program per iteration.  The partials stay where
+        the daemon produced them — no host staging, no re-``device_put``.
+        Only the exact wire reduces here; the compressed wire's
+        error-feedback residual is per-run host state, so compressed
+        merges take the classic ``merge`` path.
+        """
+        if self.wire != "exact":
+            raise ValueError("merge_partials supports wire='exact' only; "
+                             "compressed merges take the classic path")
+        if self._pmerge_fn is None:
+            self._pmerge_fn = self._build_pmerge()
+        return self._pmerge_fn(partials, counts)
 
 
 # --------------------------------------------------------------------------

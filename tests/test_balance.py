@@ -51,6 +51,21 @@ def test_capacity_estimator_rebalances_straggler():
     assert frac.sum() == pytest.approx(1.0)
 
 
+def test_capacity_estimator_observed_flags_real_measurements():
+    """`observed` distinguishes real busy-time measurements from the
+    all-ones placeholder costs (plug.Middleware.rebalance refuses to
+    'balance' from the placeholder)."""
+    est = balance.CapacityEstimator(num_nodes=3)
+    assert not est.observed
+    assert list(est.costs) == [1.0, 1.0, 1.0]
+    for _ in range(8):
+        for node, t in enumerate([1.0, 1.0, 3.0]):
+            est.update(node, entities=1000, seconds=t)
+    assert est.observed
+    frac = est.rebalance_fractions()
+    assert frac[2] == pytest.approx(frac[0] / 3, rel=0.05)
+
+
 def test_accelerators_needed():
     d = np.array([1000.0, 4000.0])
     need = balance.accelerators_needed(d, unit_capacity=1000.0, deadline=1.0)

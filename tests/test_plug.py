@@ -68,12 +68,15 @@ def _compare(a, b, atol=1e-5):
 @pytest.mark.parametrize("alg", sorted(_ALGS))
 @pytest.mark.parametrize("model", ["bsp", "gas"])
 @pytest.mark.parametrize("upper", ["host", "mesh"])
-def test_equivalence_matrix(alg, model, upper):
+@pytest.mark.parametrize("daemon", ["reference", "sharded"])
+def test_equivalence_matrix(alg, model, upper, daemon):
     """plug.Middleware ≡ run_reference ≡ legacy GXEngine over the full
-    {algorithm} × {computation model} × {upper system} matrix."""
+    {algorithm} × {computation model} × {upper system} × {daemon}
+    matrix; daemon="sharded" × upper="mesh" exercises the device-
+    resident fused drive loop, ×"host" its classic-path fallback."""
     g = _graph(alg)
     prog = _ALGS[alg](g)
-    mw = plug.Middleware(g, prog, daemon="reference", upper=upper,
+    mw = plug.Middleware(g, prog, daemon=daemon, upper=upper,
                          model=model, num_shards=SHARDS,
                          options=plug.PlugOptions(block_size=BLOCK))
     res = mw.run(max_iterations=MAX_IT)
@@ -82,8 +85,10 @@ def test_equivalence_matrix(alg, model, upper):
     _compare(_legacy(alg, model), res.state)
     if prog.monoid.idempotent:
         # min/max merges are exact selections — every layer (daemon
-        # blocks, host fold, mesh collectives) must agree bit for bit
+        # blocks, host fold, mesh collectives, the fused sharded step)
+        # must agree bit for bit
         np.testing.assert_array_equal(ref, res.state)
+    assert mw._fused == (daemon == "sharded" and upper == "mesh")
 
 
 def test_mesh_upper_system_bit_identical_to_reference():
@@ -151,6 +156,53 @@ def test_mesh_compressed_wire_runs_are_reproducible():
     np.testing.assert_array_equal(a, b)
 
 
+def test_mesh_compressed_wire_at_4_bits():
+    """bits=4 narrows the wire further; error feedback keeps the merged
+    aggregate close to exact (looser tolerance than int8)."""
+    g = _graph("pagerank")
+    prog = pagerank(g)
+    upper = plug.MeshUpperSystem(wire="compressed", bits=4)
+    mw = plug.Middleware(g, prog, daemon="reference", upper=upper,
+                         num_shards=SHARDS,
+                         options=plug.PlugOptions(block_size=BLOCK))
+    res = mw.run(max_iterations=8)
+    ref = _reference("pagerank")
+    np.testing.assert_allclose(res.state, ref, atol=5e-2)
+    assert upper.wire_stats["compressed_bytes"] > 0
+
+
+def test_mesh_compressed_rebind_across_shard_counts():
+    """Reusing a compressed-wire MeshUpperSystem across different shard
+    layouts must rebuild the mesh, the merge program, AND the
+    error-feedback allreduce + residual for the new layout (today only
+    the exact-wire rebind is exercised)."""
+    g = _graph("pagerank")
+    prog = pagerank(g)
+    upper = plug.MeshUpperSystem(wire="compressed")
+    for shards in (2, 4):
+        mw = plug.Middleware(g, prog, upper=upper, num_shards=shards,
+                             options=plug.PlugOptions(block_size=BLOCK))
+        res = mw.run(max_iterations=8)
+        np.testing.assert_allclose(res.state, _reference("pagerank"),
+                                   atol=5e-3)
+
+
+def test_stats_and_caches_reset_between_runs():
+    """Regression: run() never reset self.stats or the per-shard LRU
+    caches, so a second run() on the same instance reported inflated
+    cache/byte/round counters."""
+    g = _graph("sssp_bf")
+    prog = sssp_bf(g)
+    mw = plug.Middleware(g, prog, daemon="reference", num_shards=SHARDS,
+                         options=plug.PlugOptions(block_size=BLOCK))
+    first = mw.run(max_iterations=MAX_IT).stats.as_dict()
+    second = mw.run(max_iterations=MAX_IT).stats.as_dict()
+    assert first["rounds_total"] > 0
+    assert first["cache_misses"] > 0
+    # identical workload → identical per-run accounting, not 2× inflation
+    assert second == first
+
+
 def test_mesh_compressed_wire_rejects_idempotent():
     g = _graph("sssp_bf")
     with pytest.raises(ValueError, match="idempotent"):
@@ -196,8 +248,8 @@ def test_unknown_component_names_raise():
 
 
 def test_registries_list_shipped_components():
-    assert {"vectorized", "reference", "pallas", "blocked", "pipelined",
-            "naive"} <= set(plug.daemon_names())
+    assert {"vectorized", "reference", "pallas", "sharded", "blocked",
+            "pipelined", "naive"} <= set(plug.daemon_names())
     assert {"host", "mesh"} <= set(plug.upper_system_names())
     assert {"bsp", "gas"} <= set(plug.model_names())
 

@@ -1,0 +1,294 @@
+"""Device-resident sharded execution (DESIGN.md §3.1).
+
+Covers the ShardedDaemon + fused DriveLoop acceptance surface: one
+sharded device program per iteration, bit-identical final states to the
+host path for idempotent monoids, zero host materialization of vertex
+state inside the iteration body, Lemma-2 capacity-aware block
+assignment, and the `run_all_shards` / `merge_partials` feature
+detection (host-fallback semantics)."""
+import os
+
+# Must precede jax backend init (collection-time import, before any test
+# body runs) — the sharded daemon wants > 1 host device.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import inspect  # noqa: E402
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro import plug  # noqa: E402
+from repro.core.balance import lemma2_fractions  # noqa: E402
+from repro.graph import generate  # noqa: E402
+from repro.graph.algorithms import pagerank, sssp_bf  # noqa: E402
+from repro.plug.daemons import pad_pow2  # noqa: E402
+
+BLOCK = 256
+
+_graph_cache: dict = {}
+
+
+def _graph():
+    if "g" not in _graph_cache:
+        _graph_cache["g"] = generate.rmat(256, 2048, seed=9)
+    return _graph_cache["g"]
+
+
+def test_fused_loop_bit_identical_and_multi_device():
+    """Acceptance: the fused drive loop on 8 shards produces bit-identical
+    final state to run_reference (and hence to the host path) for an
+    idempotent monoid, actually fans out over a multi-device mesh, and
+    records fused per-iteration entries."""
+    import jax
+
+    g = generate.rmat(384, 3000, seed=21)
+    prog = sssp_bf(g)
+    mw = plug.Middleware(g, prog, daemon="sharded", upper="mesh",
+                         num_shards=8,
+                         options=plug.PlugOptions(block_size=BLOCK))
+    assert mw._fused
+    res = mw.run(max_iterations=20)
+    ref, _ = plug.run_reference(g, prog, max_iterations=20)
+    np.testing.assert_array_equal(ref, res.state)
+    assert all(rec.get("fused") for rec in res.per_iteration)
+    assert res.per_iteration[0]["blocks_run"] <= \
+        res.per_iteration[0]["blocks_total"]
+    assert len(res.per_iteration[0]["shard_blocks_run"]) == 8
+    if len(jax.devices()) >= 2:
+        assert mw.daemon.m >= 2
+        assert mw.daemon.mesh is mw.upper.mesh
+
+
+def test_fused_loop_state_never_materializes_on_host():
+    """Acceptance: zero np.asarray on vertex-sized arrays inside the
+    iteration body — host transfers per run are O(1) scalars plus the
+    single final-state materialization, independent of iteration count."""
+    g = _graph()
+    prog = pagerank(g)
+    mw = plug.Middleware(g, prog, daemon="sharded", upper="mesh",
+                         num_shards=4,
+                         options=plug.PlugOptions(block_size=BLOCK))
+    assert mw._fused
+    mw.run(max_iterations=2)  # compile outside the counted window
+
+    import jax
+
+    orig = np.asarray
+    counts = {}
+
+    def counting_asarray(a, *args, **kwargs):
+        if isinstance(a, jax.Array) and getattr(a, "size", 0) >= g.num_vertices:
+            counts["big"] = counts.get("big", 0) + 1
+        return orig(a, *args, **kwargs)
+
+    def run_counted(iters):
+        counts["big"] = 0
+        np.asarray = counting_asarray
+        try:
+            mw.run(max_iterations=iters)
+        finally:
+            np.asarray = orig
+        return counts["big"]
+
+    short, long = run_counted(3), run_counted(10)
+    # the one allowed conversion is the final Result.state materialization
+    assert short <= 1 and long <= 1
+    assert long == short  # no growth with iteration count
+
+
+def test_sharded_daemon_partials_match_per_shard_aggregates():
+    """run_all_shards hands (m, N, K) per-device partials whose mesh-axis
+    fold equals the fold of the classic per-shard run_blocks aggregates —
+    bit-identical for the min monoid."""
+    g = _graph()
+    prog = sssp_bf(g)
+    mw = plug.Middleware(g, prog, daemon="sharded", upper="mesh",
+                         num_shards=4,
+                         options=plug.PlugOptions(block_size=BLOCK))
+    state, aux = prog.init(g)
+    partials, counts, blocks_run = mw.daemon.run_all_shards(state, aux)
+    m = mw.daemon.m
+    assert partials.shape == (m, g.num_vertices, prog.state_width)
+    assert counts.shape == (m, g.num_vertices)
+    assert blocks_run.shape == (4,)
+
+    # classic path: one run_blocks per shard, folded with the monoid.
+    # (Vertices with no contribution carry segment_min's +inf fill in
+    # both paths; the drive loops mask them via has_msg before Apply.)
+    expect = np.full((g.num_vertices, prog.state_width), np.inf, np.float32)
+    expect_cnt = np.zeros(g.num_vertices, np.int64)
+    for j, bs in enumerate(mw.blocksets):
+        agg, cnt = mw.daemon.run_blocks(state, aux, bs,
+                                        np.arange(bs.num_blocks), {})
+        expect = np.minimum(expect, agg)
+        expect_cnt += cnt
+    np.testing.assert_array_equal(
+        expect, np.asarray(partials).min(axis=0))
+    np.testing.assert_array_equal(
+        expect_cnt, np.asarray(counts).sum(axis=0))
+
+    # and the upper system reduces them to the same merged aggregate
+    agg, cnt = mw.upper.merge_partials(partials, counts)
+    np.testing.assert_array_equal(expect, np.asarray(agg))
+
+
+def test_sharded_daemon_falls_back_without_device_partial_upper():
+    """daemon="sharded" with upper="host" runs the classic per-shard path
+    (run_blocks inherited from VectorizedDaemon) — same answer, no fused
+    records."""
+    g = _graph()
+    prog = sssp_bf(g)
+    mw = plug.Middleware(g, prog, daemon="sharded", upper="host",
+                         num_shards=2,
+                         options=plug.PlugOptions(block_size=BLOCK))
+    assert not mw._fused
+    res = mw.run(max_iterations=12)
+    ref, _ = plug.run_reference(g, prog, max_iterations=12)
+    np.testing.assert_array_equal(ref, res.state)
+    assert not any(rec.get("fused") for rec in res.per_iteration)
+
+
+def test_unknown_model_order_falls_back_to_host_loop():
+    """The fused step realizes the BSP/GAS trajectory; a custom model
+    with any other hook order must keep the host loop that drives its
+    hooks verbatim."""
+
+    class Priority(plug.BSP):
+        name = "priority"
+        order = ("apply", "gen", "merge")
+
+    class DeltaBSP(plug.BSP):
+        """BSP order, but a custom hook — the fused step would bypass it."""
+        name = "delta-bsp"
+
+        def aggregates(self, gather, pending, record):
+            record["delta"] = True
+            return gather(record)
+
+    g = _graph()
+    for model in (Priority(), DeltaBSP()):
+        mw = plug.Middleware(g, sssp_bf(g), daemon="sharded", upper="mesh",
+                             model=model, num_shards=2,
+                             options=plug.PlugOptions(block_size=BLOCK))
+        assert not mw._fused
+    # plain BSP/GAS instances (and hook-preserving subclasses) do fuse
+    mw = plug.Middleware(g, sssp_bf(g), daemon="sharded", upper="mesh",
+                         model="gas", num_shards=2,
+                         options=plug.PlugOptions(block_size=BLOCK))
+    assert mw._fused
+
+
+def test_compressed_wire_disables_fused_loop():
+    """The compressed wire's error-feedback residual is host state — the
+    middleware must keep the classic path for it."""
+    g = _graph()
+    mw = plug.Middleware(g, pagerank(g), daemon="sharded",
+                         upper=plug.MeshUpperSystem(wire="compressed"),
+                         num_shards=2,
+                         options=plug.PlugOptions(block_size=BLOCK))
+    assert not mw._fused
+    with pytest.raises(ValueError, match="exact"):
+        mw.upper.merge_partials(None, None)
+
+
+def test_mesh_merge_accepts_device_resident_partials():
+    """MeshUpperSystem.merge takes already-stacked device-resident arrays
+    without re-staging them through np.stack + device_put."""
+    g = _graph()
+    prog = sssp_bf(g)
+    upper = plug.MeshUpperSystem()
+    upper.bind(prog, 4)
+    rng = np.random.default_rng(0)
+    states = [rng.standard_normal((g.num_vertices, 4)).astype(np.float32)
+              for _ in range(4)]
+    aggs = [rng.standard_normal((g.num_vertices, 4)).astype(np.float32)
+            for _ in range(4)]
+    cnts = [rng.integers(0, 3, g.num_vertices).astype(np.int32)
+            for _ in range(4)]
+    base, agg, cnt = upper.merge(states, aggs, cnts)
+
+    placed = (upper._place(np.stack(states)), upper._place(np.stack(aggs)),
+              upper._place(np.stack(cnts)))
+
+    def boom(arr):  # re-placement would mean a host→device round-trip
+        raise AssertionError("device-resident input was re-device_put")
+
+    upper._place = boom
+    base2, agg2, cnt2 = upper.merge(*placed)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(base2))
+    np.testing.assert_array_equal(np.asarray(agg), np.asarray(agg2))
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cnt2))
+
+
+def test_capacity_aware_partition_follows_lemma2():
+    """Middleware(capacities=...) sizes shards with lemma2_fractions: a
+    shard that costs 3× per entity gets ~1/3 the edges."""
+    g = generate.rmat(512, 8000, seed=5)
+    caps = np.array([1.0, 1.0, 3.0, 3.0])
+    mw = plug.Middleware(g, sssp_bf(g), num_shards=4, capacities=caps,
+                         options=plug.PlugOptions(block_size=64))
+    sizes = np.array([p.num_edges for p in mw.partitions], dtype=np.float64)
+    got = sizes / sizes.sum()
+    want = lemma2_fractions(caps)
+    # contiguous cuts snap to src runs; allow a few percent of slack
+    np.testing.assert_allclose(got, want, atol=0.05)
+    res = mw.run(max_iterations=20)
+    ref, _ = plug.run_reference(g, sssp_bf(g), max_iterations=20)
+    np.testing.assert_array_equal(ref, res.state)
+
+
+def test_rebalance_repartitions_from_busy_times():
+    """The host loop records per-shard busy times; rebalance() feeds them
+    (or explicit capacities) through Lemma 2 and rebuilds the block
+    assignment — results stay correct afterwards."""
+    g = _graph()
+    prog = sssp_bf(g)
+    mw = plug.Middleware(g, prog, daemon="reference", num_shards=2,
+                         options=plug.PlugOptions(block_size=BLOCK))
+    res = mw.run(max_iterations=12)
+    assert "shard_busy_s" in res.per_iteration[0]
+    assert len(res.per_iteration[0]["shard_busy_s"]) == 2
+    fr = mw.rebalance()  # from the estimator the records fed
+    assert fr.shape == (2,) and abs(fr.sum() - 1.0) < 1e-9
+
+    # explicit capacities: skew, then verify the run is still exact
+    before = [p.num_edges for p in mw.partitions]
+    mw.rebalance(capacities=[1.0, 4.0])
+    after = [p.num_edges for p in mw.partitions]
+    assert after[0] > before[0]  # cheap shard took on more edges
+    res2 = mw.run(max_iterations=12)
+    ref, _ = plug.run_reference(g, prog, max_iterations=12)
+    np.testing.assert_array_equal(ref, res2.state)
+
+    # a fused middleware rebalances too (re-places the stacked blocks) —
+    # but only with explicit capacities: the one-program-per-iteration
+    # loop observes no per-shard busy times, and a silent uniform
+    # re-partition would masquerade as balancing
+    mw2 = plug.Middleware(g, prog, daemon="sharded", upper="mesh",
+                          num_shards=4,
+                          options=plug.PlugOptions(block_size=64))
+    mw2.run(max_iterations=4)
+    with pytest.raises(ValueError, match="busy times"):
+        mw2.rebalance()
+    with pytest.raises(ValueError, match="shape"):
+        mw2.rebalance(capacities=[1.0, 2.0])  # wrong length for 4 shards
+
+    # explicit partitions are the caller's: rebalance refuses to replace
+    from repro.graph.partition import partition_hash
+    mw3 = plug.Middleware(g, prog, partitions=partition_hash(g, 2),
+                          options=plug.PlugOptions(block_size=BLOCK))
+    with pytest.raises(ValueError, match="explicit partitions"):
+        mw3.rebalance(capacities=[1.0, 1.0])
+    mw2.rebalance(capacities=[1.0, 1.0, 2.0, 2.0])
+    res3 = mw2.run(max_iterations=20)
+    np.testing.assert_array_equal(ref, res3.state)
+
+
+def test_pad_pow2_signature_and_padding():
+    """Satellite: the dead nb_total parameter is gone; padding still goes
+    to the next power of two with -1 sentinels."""
+    assert list(inspect.signature(pad_pow2).parameters) == ["sel"]
+    out = pad_pow2(np.arange(5))
+    assert out.size == 8 and list(out[5:]) == [-1, -1, -1]
+    same = pad_pow2(np.arange(4))
+    assert same.size == 4 and list(same) == [0, 1, 2, 3]
