@@ -15,6 +15,12 @@ device-resident ``shard_map`` program per iteration over an 8-device
 host mesh; the fused drive loop) — so the acceleration of the
 device-resident path is directly measurable against Fig. 8's baselines.
 
+A third table sweeps the fused loop itself: ``daemon="sharded"`` ×
+``kernel={reference, pallas}`` (the shard_map body's block program —
+Pallas runs in interpret mode off-TPU) × ``model={bsp, async}`` (the
+barriered fused step vs the priority/staleness async step), per-
+iteration steady-state times.
+
 ``--quick`` runs a reduced matrix and writes the ``BENCH_plug.json``
 tier-2 baseline (scripts/verify.sh --tier2).
 
@@ -45,13 +51,22 @@ from repro.graph.algorithms import label_prop, pagerank, sssp_bf  # noqa: E402
 
 DAEMONS = ("naive", "blocked", "vectorized")
 SHARDED_DAEMONS = ("vectorized", "pipelined", "sharded")
+SHARDED_KERNELS = ("reference", "pallas")
+SHARDED_MODELS = ("bsp", "async")
 SHARDS = 8
 
 
+def _steady_state_per_iter(mw, iters: int) -> float:
+    """One measurement protocol for every per-iteration table: a warmup
+    run excludes compile time, then wall time divided by the iterations
+    the run actually executed (in case the workload converges early)."""
+    mw.run(max_iterations=iters)  # warmup: compile
+    res = mw.run(max_iterations=iters)
+    return res.wall_time / max(1, res.iterations)
+
+
 def _per_iter_times(g, prog, iters: int, *, block: int) -> dict:
-    """Steady-state per-iteration wall time per daemon at SHARDS shards
-    (one warmup run excludes compile time; divided by the iterations the
-    run actually executed, in case the workload converges early)."""
+    """Steady-state per-iteration wall time per daemon at SHARDS shards."""
     times = {}
     for daemon in SHARDED_DAEMONS:
         mw = plug.Middleware(
@@ -59,10 +74,34 @@ def _per_iter_times(g, prog, iters: int, *, block: int) -> dict:
             upper="mesh" if daemon == "sharded" else "host",
             num_shards=SHARDS,
             options=plug.PlugOptions(block_size=block))
-        mw.run(max_iterations=iters)  # warmup: compile
-        res = mw.run(max_iterations=iters)
-        times[daemon] = res.wall_time / max(1, res.iterations)
+        times[daemon] = _steady_state_per_iter(mw, iters)
     return times
+
+
+def _sharded_matrix_times(g, prog, iters: int, *, block: int,
+                          reuse: dict | None = None) -> dict:
+    """The fused drive loop swept over kernel × computation model:
+    per-iteration steady-state wall time for daemon="sharded" with the
+    reference vs Pallas shard_map body under the barriered (bsp) vs the
+    priority/staleness (async) fused step.  ``reuse`` injects cells
+    another table already measured (the shards8 "sharded" row IS
+    reference/bsp), so each configuration is recorded exactly once."""
+    rows = dict(reuse or {})
+    for kernel in SHARDED_KERNELS:
+        for model in SHARDED_MODELS:
+            key = f"{kernel}/{model}"
+            if key in rows:
+                continue
+            mw = plug.Middleware(
+                g, prog, daemon=plug.get_daemon("sharded", kernel=kernel),
+                upper="mesh", model=model, num_shards=SHARDS,
+                options=plug.PlugOptions(block_size=block))
+            if not mw._fused:  # survives python -O, unlike assert
+                raise RuntimeError(
+                    f"sharded matrix cell {key} fell back to the host "
+                    "loop; refusing to record it as a fused baseline")
+            rows[key] = _steady_state_per_iter(mw, iters)
+    return rows
 
 
 def run(small: bool = True, quick: bool = False) -> dict:
@@ -91,6 +130,9 @@ def run(small: bool = True, quick: bool = False) -> dict:
                 repeat=1, warmup=0)
         per_iter = _per_iter_times(g, prog, iters[name],
                                    block=256 if quick else 1024)
+        matrix = _sharded_matrix_times(
+            g, prog, iters[name], block=256 if quick else 1024,
+            reuse={"reference/bsp": per_iter["sharded"]})
         out[name] = {
             **times,
             "speedup_blocked": times["naive"] / times["blocked"],
@@ -102,6 +144,12 @@ def run(small: bool = True, quick: bool = False) -> dict:
                     per_iter["vectorized"] / per_iter["sharded"],
                 "speedup_sharded_vs_pipelined":
                     per_iter["pipelined"] / per_iter["sharded"],
+            },
+            "sharded_matrix": {
+                "num_shards": SHARDS,
+                "kernels": list(SHARDED_KERNELS),
+                "models": list(SHARDED_MODELS),
+                "per_iter_s": matrix,
             },
         }
     import jax
@@ -132,6 +180,9 @@ def main():
               f"sharded={p['sharded']*1e3:.1f}ms "
               f"(sharded {s8['speedup_sharded_vs_vectorized']:.1f}x vs "
               f"vectorized)")
+        mx = r["sharded_matrix"]["per_iter_s"]
+        cells = " ".join(f"{k}={v*1e3:.1f}ms" for k, v in mx.items())
+        print(f"{'':12s} sharded kernel×model/iter: {cells}")
 
 
 if __name__ == "__main__":

@@ -5,7 +5,8 @@
 # Tier-2 (scripts/verify.sh --tier2): one production dry-run slice
 # (1 arch × 1 shape × both meshes, compiled on 512 fake devices) plus the
 # acceleration benchmark on the repro.plug API — including the
-# daemon="sharded" device-resident path on an 8-device host mesh — which
+# daemon="sharded" device-resident path on an 8-device host mesh and its
+# kernel={reference,pallas} × model={bsp,async} fused-loop matrix — which
 # records the BENCH_plug.json baseline under results/benchmarks/ so the
 # perf trajectory of the fused drive loop is tracked PR over PR.
 set -euo pipefail
@@ -17,7 +18,7 @@ if [[ "${1:-}" == "--tier2" ]]; then
     echo "== tier-2: dry-run slice (stablelm-1.6b × train_4k × both meshes) =="
     python -m repro.launch.dryrun --arch stablelm-1.6b --shape train_4k --no-hlo
     python -m repro.launch.dryrun --arch stablelm-1.6b --shape train_4k --multi-pod --no-hlo
-    echo "== tier-2: plug acceleration baseline incl. sharded daemon (BENCH_plug.json) =="
+    echo "== tier-2: plug acceleration baseline incl. sharded kernel×model matrix (BENCH_plug.json) =="
     # bench_accel appends --xla_force_host_platform_device_count=8 to
     # XLA_FLAGS itself (preserving any pre-set flags) for the 8-device
     # host-mesh sharded comparison

@@ -37,6 +37,12 @@ import jax.numpy as jnp
 import numpy as np
 
 
+# Host-side scatter-combine ufuncs per monoid (Monoid.scatter_at) —
+# module-level so per-edge/per-block callers pay one dict lookup, not a
+# dict construction.
+_SCATTER_UFUNCS = {"sum": np.add, "min": np.minimum, "max": np.maximum}
+
+
 @dataclasses.dataclass(frozen=True)
 class Monoid:
     """Commutative, associative merge with identity (MSGMerge semantics)."""
@@ -56,6 +62,22 @@ class Monoid:
         if self.name == "max":
             return jax.ops.segment_max(msgs, seg_ids, num_segments)
         raise ValueError(self.name)
+
+    def scatter_at(self, out: np.ndarray, ids, vals) -> None:
+        """In-place host scatter-combine: ``out[ids] = combine(out[ids], vals)``.
+
+        The host-side daemons (blocked/pipelined upload, the naive
+        per-edge loop) merge block partials into a NumPy aggregate with
+        a ufunc ``.at`` call; a monoid with no known ufunc raises rather
+        than silently merging with the wrong operator.
+        """
+        try:
+            ufunc = _SCATTER_UFUNCS[self.name]
+        except KeyError:
+            raise ValueError(
+                f"monoid {self.name!r} has no host scatter rule; known: "
+                f"{sorted(_SCATTER_UFUNCS)}") from None
+        ufunc.at(out, ids, vals)
 
 
 SUM = Monoid("sum", 0.0, lambda a, b: a + b, idempotent=False)

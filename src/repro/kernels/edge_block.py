@@ -54,7 +54,7 @@ def _kernel(vstate_ref, vaux_ref, lsrc_ref, ldst_ref, w_ref, emask_ref,
     if monoid.name == "sum":
         masked = msgs * emask[:, None]
         partial = dst_oh.T @ masked  # (VB, K) scatter-add on MXU
-    else:
+    elif monoid.name in ("min", "max"):
         # masked reduction per column: (VB, B) select matrix
         sel = (dst_oh.T > 0.0) & (emask[None, :] > 0.0)  # (VB, B)
         cols = []
@@ -63,6 +63,13 @@ def _kernel(vstate_ref, vaux_ref, lsrc_ref, ldst_ref, w_ref, emask_ref,
             red = jnp.min(mat, axis=1) if monoid.name == "min" else jnp.max(mat, axis=1)
             cols.append(red)
         partial = jnp.stack(cols, axis=1)
+    else:
+        # trace-time check, same contract as Monoid.segment_reduce /
+        # scatter_at: an unknown monoid must raise, never silently
+        # merge with the wrong operator
+        raise ValueError(
+            f"monoid {monoid.name!r} has no Pallas merge rule; known: "
+            "['max', 'min', 'sum']")
     counts = (dst_oh.T @ emask[:, None])[:, 0]  # (VB,)
 
     partial_ref[0] = partial.astype(partial_ref.dtype)

@@ -26,7 +26,9 @@ Seams and shipped implementations:
 ``upper=``         ``"host"`` (NumPy merge),
                    ``"mesh"`` (shard_map collectives over ``repro.dist``;
                    optional ``wire="compressed"`` int8 aggregate sync)
-``model=``         ``"bsp"``, ``"gas"``
+``model=``         ``"bsp"``, ``"gas"``, ``"async"`` (priority/staleness
+                   scheduling; with ``daemon="sharded"``+``upper="mesh"``
+                   it runs the fused async device step)
 =================  =====================================================
 
 Register your own with ``register_daemon`` / ``register_upper_system`` /
@@ -34,15 +36,16 @@ Register your own with ``register_daemon`` / ``register_upper_system`` /
 ``repro.core.engine.GXEngine`` remains as a deprecation shim over this
 package.
 """
-from repro.plug.computation import (BSP, GAS, get_model, model_names,
-                                    register_model)
+from repro.plug.computation import (BSP, GAS, AsyncModel, get_model,
+                                    model_names, register_model)
 from repro.plug.daemons import (BlockedDaemon, NaiveDaemon, PipelinedDaemon,
                                 ShardedDaemon, VectorizedDaemon,
                                 daemon_names, get_daemon, register_daemon)
-from repro.plug.middleware import (DriveLoop, HostDriveLoop, Middleware,
-                                   make_apply_fn)
+from repro.plug.middleware import (AsyncDriveLoop, DriveLoop, HostDriveLoop,
+                                   Middleware, make_apply_fn)
 from repro.plug.protocols import (ComputationModel, Daemon,
-                                  DevicePartialUpper, PlugOptions, Result,
+                                  DevicePartialUpper, PlugOptions,
+                                  PriorityAsyncModel, Result,
                                   ShardCapableDaemon, UpperSystem)
 from repro.plug.reference import run_reference
 from repro.plug.uppers import (HostUpperSystem, MeshUpperSystem,
@@ -50,12 +53,13 @@ from repro.plug.uppers import (HostUpperSystem, MeshUpperSystem,
                                upper_system_names)
 
 __all__ = [
-    "BSP", "GAS", "BlockedDaemon", "ComputationModel", "Daemon",
-    "DevicePartialUpper", "DriveLoop", "HostDriveLoop", "HostUpperSystem",
-    "MeshUpperSystem", "Middleware", "NaiveDaemon", "PipelinedDaemon",
-    "PlugOptions", "Result", "ShardCapableDaemon", "ShardedDaemon",
-    "UpperSystem", "VectorizedDaemon", "daemon_names", "get_daemon",
-    "get_model", "get_upper_system", "make_apply_fn", "model_names",
-    "register_daemon", "register_model", "register_upper_system",
-    "run_reference", "upper_system_names",
+    "BSP", "GAS", "AsyncDriveLoop", "AsyncModel", "BlockedDaemon",
+    "ComputationModel", "Daemon", "DevicePartialUpper", "DriveLoop",
+    "HostDriveLoop", "HostUpperSystem", "MeshUpperSystem", "Middleware",
+    "NaiveDaemon", "PipelinedDaemon", "PlugOptions", "PriorityAsyncModel",
+    "Result", "ShardCapableDaemon", "ShardedDaemon", "UpperSystem",
+    "VectorizedDaemon", "daemon_names", "get_daemon", "get_model",
+    "get_upper_system", "make_apply_fn", "model_names", "register_daemon",
+    "register_model", "register_upper_system", "run_reference",
+    "upper_system_names",
 ]

@@ -14,9 +14,18 @@ three hooks the middleware drive loop calls:
 
 Both orderings produce identical trajectories on the same template
 (tests/test_plug.py's equivalence matrix), exactly as the paper argues.
-A new model (async, priority-ordered, delta-stepping) implements the
-same three hooks and registers with :func:`register_model` — the drive
-loop never changes.
+A new model implements the same three hooks and registers with
+:func:`register_model` — the drive loop never changes.
+
+:class:`AsyncModel` is the first post-BSP/GAS model: PowerGraph-style
+asynchronous execution with priority (delta-stepping flavored)
+scheduling.  There is no barriered superstep — every consumer takes the
+*freshest available* aggregate, and a producer whose contribution moved
+less than a decaying priority threshold ``theta`` is allowed to stay
+stale (its last-shipped aggregate keeps being consumed) until either its
+residual crosses the threshold or the threshold decays under it.  The
+threshold collapses the moment the frontier drains, so the tail of every
+run is barriered (BSP-equivalent) and convergence is exact.
 """
 from __future__ import annotations
 
@@ -55,6 +64,66 @@ class GAS:
         return gather(record)
 
 
+class AsyncModel:
+    """Asynchronous priority execution (PowerGraph-async / delta-stepping).
+
+    Per shard the hook order is still Gen → Merge → Apply; what changes
+    is the *superstep boundary*: there is none.  Shards consume the
+    freshest aggregates available, and a shard whose fresh contribution
+    differs from its last-shipped one by less than the priority
+    threshold ``theta`` may hold (stay stale).  ``theta`` starts at
+    ``theta0``, decays by ``decay`` every iteration, and collapses to 0
+    when the frontier drains; at or below ``floor`` every shard is
+    forced fresh, so the tail of the run is BSP-equivalent and the run
+    converges to the same fixed point as the barriered models (exactly,
+    for idempotent monoids).
+
+    Where the staleness actually lives depends on the drive loop:
+
+    * the **fused device loop** (``daemon="sharded"``, ``upper="mesh"``)
+      carries the scheduling state on the mesh — per-device held
+      partials/counts, the frontier backlog accumulated while a device
+      holds (re-delivered on its next refresh, so no message is ever
+      lost), and ``theta`` itself; see
+      ``plug.middleware.AsyncDriveLoop`` and the upper system's
+      ``merge_partials_async`` cadence.
+    * the **host loop** is itself a global barrier — after its gather
+      returns, every aggregate already *is* the freshest available, so
+      the three hooks below degenerate to BSP's ordering by
+      construction.  This is what makes ``model="async"`` safe on every
+      component combination: staleness only exists where shard programs
+      actually race.
+    """
+
+    name = "async"
+    # Per-shard ordering (the superstep boundary itself is gone —
+    # ``barrier`` is what distinguishes this model from BSP, not the
+    # hook order).
+    order = ("gen", "merge", "apply")
+    barrier = False
+
+    def __init__(self, theta0: float = 0.1, decay: float = 0.5,
+                 floor: float = 1e-12):
+        if decay <= 0.0 or decay >= 1.0:
+            raise ValueError(f"decay must be in (0, 1), got {decay}")
+        if theta0 < 0.0 or floor < 0.0:
+            raise ValueError("theta0 and floor must be non-negative")
+        self.theta0 = float(theta0)
+        self.decay = float(decay)
+        self.floor = float(floor)
+
+    def prologue(self, gather):
+        return None
+
+    def aggregates(self, gather, pending, record):
+        # Freshest available: on the barriered host loop that is simply
+        # this iteration's gather.
+        return gather(record)
+
+    def epilogue(self, gather, record):
+        return None
+
+
 # --------------------------------------------------------------------------
 # registry
 # --------------------------------------------------------------------------
@@ -80,3 +149,4 @@ def model_names() -> tuple:
 
 register_model("bsp", BSP)
 register_model("gas", GAS)
+register_model("async", AsyncModel)

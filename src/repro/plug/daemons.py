@@ -71,32 +71,46 @@ def block_partials(program: VertexProgram, state, aux, vids, lsrc, ldst, w,
     msgs = jnp.where(emask[..., None], msgs, monoid.identity)
     seg = (ldst + jnp.arange(nb, dtype=ldst.dtype)[:, None] * vb).reshape(-1)
     partial = monoid.segment_reduce(msgs.reshape(nb * b, k), seg, nb * vb)
-    partial = partial.reshape(nb, vb, k)
     counts = jax.ops.segment_sum(
-        emask.reshape(-1).astype(jnp.int32), seg, nb * vb).reshape(nb, vb)
-    return partial, counts
+        emask.reshape(-1).astype(jnp.int32), seg, nb * vb)
+    # Empty segments: jax fills min/max with ±inf; the block-program
+    # contract (kernels/ref.py, and the Pallas kernel's masked
+    # reduction) uses the monoid identity — merge-equivalent, and what
+    # keeps the reference and Pallas paths bit-identical per slot.
+    partial = jnp.where((counts > 0)[:, None], partial, monoid.identity)
+    return partial.reshape(nb, vb, k), counts.reshape(nb, vb)
+
+
+def block_partials_pallas(program: VertexProgram, state, aux, vids, lsrc,
+                          ldst, w, emask):
+    """The Pallas edge-block kernel behind the same contract as
+    :func:`block_partials` (traceable, no jit of its own) — so the one
+    kernel dispatch serves the per-shard ``VectorizedDaemon`` and the
+    ``shard_map`` body of ``ShardedDaemon``, keeping the two paths
+    bit-identical per kernel for idempotent monoids."""
+    from repro.kernels import ops as kops
+
+    return kops.edge_block_aggregate(state, aux, vids, lsrc, ldst, w, emask,
+                                     program=program)
+
+
+# One dispatch table for every daemon that runs block programs: the
+# traceable per-kernel implementations of the block_partials contract.
+BLOCK_PARTIALS = {
+    "reference": block_partials,
+    "pallas": block_partials_pallas,
+}
 
 
 def make_block_fn(program: VertexProgram, *, kernel: str = "reference"):
     """Per-block Gen + block-local Merge → (nb, VB, K) partials."""
     if kernel not in KERNELS:
         raise ValueError(f"kernel must be one of {KERNELS}, got {kernel!r}")
-
-    if kernel == "pallas":
-        from repro.kernels import ops as kops
-
-        @jax.jit
-        def block_fn(state, aux, vids, lsrc, ldst, w, emask):
-            return kops.edge_block_aggregate(
-                state, aux, vids, lsrc, ldst, w, emask,
-                program=program)
-
-        return block_fn
+    impl = BLOCK_PARTIALS[kernel]
 
     @jax.jit
     def block_fn(state, aux, vids, lsrc, ldst, w, emask):
-        return block_partials(program, state, aux, vids, lsrc, ldst, w,
-                              emask)
+        return impl(program, state, aux, vids, lsrc, ldst, w, emask)
 
     return block_fn
 
@@ -193,16 +207,18 @@ class ShardedDaemon(VectorizedDaemon):
     :class:`VectorizedDaemon`, so with an upper system that cannot merge
     device partials (``upper="host"``) the same instance simply runs the
     classic per-shard path.
+
+    ``kernel="pallas"`` routes the block math inside the ``shard_map``
+    body through the Pallas edge-block kernel (``repro.kernels``,
+    interpret mode off-TPU) via the same :data:`BLOCK_PARTIALS` dispatch
+    the per-shard daemons use — sharded and vectorized stay bit-identical
+    per kernel for idempotent monoids.
     """
 
     name = "sharded"
 
     def __init__(self, kernel: str = "reference", mesh=None,
                  axis: str = "shard"):
-        if kernel != "reference":
-            raise NotImplementedError(
-                "ShardedDaemon runs the reference block math inside its "
-                f"shard_map body; kernel={kernel!r} is not supported yet")
         super().__init__(kernel)
         self.mesh = mesh
         self._auto_mesh = mesh is None
@@ -285,9 +301,10 @@ class ShardedDaemon(VectorizedDaemon):
         self._partials_fns = {}
         return self
 
-    def _partials_fn(self, use_frontier: bool):
+    def _partials_fn(self, use_frontier: bool, per_device: bool = False):
+        key = (use_frontier, per_device)
         try:
-            return self._partials_fns[use_frontier]
+            return self._partials_fns[key]
         except KeyError:
             pass
         from jax.experimental.shard_map import shard_map
@@ -297,19 +314,25 @@ class ShardedDaemon(VectorizedDaemon):
         monoid = program.monoid
         n = self.n
         k = program.state_width
+        # one kernel dispatch with the per-shard daemons (BLOCK_PARTIALS),
+        # so sharded and vectorized stay bit-identical per kernel
+        partials_impl = BLOCK_PARTIALS[self.kernel]
 
         def body(state, aux, active, vids, lsrc, ldst, w, emask, gsrc):
-            # local slices (S/m, nb, …); state/aux/active replicated
+            # local slices (S/m, nb, …); state/aux replicated; active is
+            # replicated (N,) — or this device's (1, N) backlog row when
+            # the fused async loop drives per-device frontiers
             s_l, nb, vb = vids.shape
             b = lsrc.shape[2]
             if use_frontier:
                 # same block granularity as the host path: a block with
                 # no active source contributes nothing this iteration
-                blk_active = jnp.any(active[gsrc] & emask, axis=2)
+                act = active[0] if per_device else active
+                blk_active = jnp.any(act[gsrc] & emask, axis=2)
                 emask = emask & blk_active[..., None]
             else:
                 blk_active = jnp.any(emask, axis=2)
-            partial, counts = block_partials(
+            partial, counts = partials_impl(
                 program, state, aux,
                 vids.reshape(s_l * nb, vb), lsrc.reshape(s_l * nb, b),
                 ldst.reshape(s_l * nb, b), w.reshape(s_l * nb, b, 1),
@@ -325,11 +348,12 @@ class ShardedDaemon(VectorizedDaemon):
 
         spec = P(self.axis)
         rep = P()
+        act_spec = spec if per_device else rep
         fn = shard_map(
             body, mesh=self.mesh,
-            in_specs=(rep, rep, rep, spec, spec, spec, spec, spec, spec),
+            in_specs=(rep, rep, act_spec, spec, spec, spec, spec, spec, spec),
             out_specs=(spec, spec, spec), check_rep=False)
-        self._partials_fns[use_frontier] = fn
+        self._partials_fns[key] = fn
         return fn
 
     def run_all_shards(self, state, aux, active=None, *, stacked=None):
@@ -337,8 +361,11 @@ class ShardedDaemon(VectorizedDaemon):
 
         Args:
           state, aux: the (replicated) global vertex table.
-          active: (N,) bool frontier for block skipping, or None to run
-            every block (non-frontier programs).
+          active: frontier for block skipping — a replicated (N,) bool
+            shared by every device, an (m, N) bool sharded over the mesh
+            axis with each row that device's private frontier (the fused
+            async loop's backlog), or None to run every block
+            (non-frontier programs).
           stacked: the ``self.stacked`` pytree threaded through as jit
             arguments (the fused drive loop does this so the block
             tensors are not baked into the compiled step as constants).
@@ -350,7 +377,8 @@ class ShardedDaemon(VectorizedDaemon):
         if st is None:
             raise RuntimeError(
                 "ShardedDaemon.run_all_shards called before bind_shards")
-        fn = self._partials_fn(active is not None)
+        per_device = active is not None and getattr(active, "ndim", 1) == 2
+        fn = self._partials_fn(active is not None, per_device)
         if active is None:
             active = jnp.zeros((1,), jnp.bool_)  # placeholder, unread
         return fn(state, aux, active, st["vids"], st["lsrc"], st["ldst"],
@@ -399,12 +427,10 @@ class _StreamingDaemon:
             partial = np.asarray(slot["partial"])[0]
             counts = np.asarray(slot["counts"])[0]
             vids = slot["vids"]
-            if monoid.name == "sum":
-                np.add.at(agg, vids, partial)
-            elif monoid.name == "min":
-                np.minimum.at(agg, vids, partial)
-            else:
-                np.maximum.at(agg, vids, partial)
+            # dispatch through the monoid (raises ValueError for a custom
+            # monoid with no host scatter rule — regression: a bare else
+            # silently max-merged unknown monoids into wrong aggregates)
+            monoid.scatter_at(agg, vids, partial)
             np.add.at(cnt, vids, counts)
 
         if self.pipelined:
@@ -452,12 +478,10 @@ class NaiveDaemon:
                 msg = np.asarray(prog.msg_gen(
                     state[s : s + 1], state[d : d + 1],
                     bs.weights[b, e : e + 1], aux[s : s + 1]))[0]
-                if monoid.name == "sum":
-                    agg[d] += msg
-                elif monoid.name == "min":
-                    agg[d] = np.minimum(agg[d], msg)
-                else:
-                    agg[d] = np.maximum(agg[d], msg)
+                # dispatch through the monoid, not a name chain with a
+                # silent max-merge fallback (same regression as
+                # _StreamingDaemon.upload)
+                monoid.scatter_at(agg, d, msg)
                 cnt[d] += 1
         return agg, cnt.astype(np.int32)
 

@@ -12,7 +12,7 @@ accounting) and the iteration drive loop — and delegates everything else:
 * Gen/Merge/Apply ordering to the
   :class:`~repro.plug.protocols.ComputationModel`.
 
-Two drive loops implement the iteration:
+Three drive loops implement the iteration:
 
 * :class:`HostDriveLoop` — the classic per-shard path: every iteration
   calls each shard's daemon, materializes aggregates on the host,
@@ -26,6 +26,12 @@ Two drive loops implement the iteration:
   wire: one jitted step per iteration fuses gather + Gen + segmented
   Merge + the cross-device collective + Apply + the convergence check,
   and vertex state never leaves the mesh between iterations.
+* :class:`AsyncDriveLoop` — the fused step of the asynchronous priority
+  model (:class:`~repro.plug.protocols.PriorityAsyncModel`, e.g.
+  ``model="async"``): same capabilities as :class:`DriveLoop`, but the
+  step additionally carries the model's scheduling state on the mesh —
+  per-device held partials/counts, the frontier backlog accumulated
+  while a device holds, and the decaying priority threshold.
 
 Lemma-2 capacity-aware block assignment (paper Sec. III-C) plugs in at
 partition time: ``Middleware(capacities=...)`` sizes shards with
@@ -53,17 +59,19 @@ from repro.core.blocks import build_blocks
 from repro.core.sync import LRUVertexCache, SyncStats, can_skip_sync
 from repro.core.template import VertexProgram
 from repro.graph.structure import EdgePartition, Graph
-from repro.plug.computation import BSP, GAS, get_model
+from repro.plug.computation import BSP, GAS, AsyncModel, get_model
 from repro.plug.daemons import get_daemon
-from repro.plug.protocols import (DevicePartialUpper, PlugOptions, Result,
+from repro.plug.protocols import (DevicePartialUpper, PlugOptions,
+                                  PriorityAsyncModel, Result,
                                   ShardCapableDaemon)
 from repro.plug.uppers import get_upper_system
 
-# Computation-model orders the fused loop may realize.  BSP and GAS
-# produce identical state trajectories on the same template (paper
-# Sec. IV-B2; ``plug.computation`` docstring), so one fused step serves
-# both; anything else falls back to the host loop, which drives the
-# model's hooks verbatim.
+# Computation-model orders the barriered fused loop may realize.  BSP
+# and GAS produce identical state trajectories on the same template
+# (paper Sec. IV-B2; ``plug.computation`` docstring), so one fused step
+# serves both; a priority/async model gets its own fused step
+# (AsyncDriveLoop); anything else falls back to the host loop, which
+# drives the model's hooks verbatim.
 _FUSABLE_ORDERS = {("gen", "merge", "apply"), ("merge", "apply", "gen")}
 _MODEL_HOOKS = ("prologue", "aggregates", "epilogue")
 
@@ -79,6 +87,20 @@ def _model_is_fusable(model) -> bool:
     return any(
         all(getattr(cls, h, None) is getattr(base, h) for h in _MODEL_HOOKS)
         for base in (BSP, GAS))
+
+
+def _async_model_is_fusable(model) -> bool:
+    """True iff the model's trajectory is what the fused async step
+    realizes: the :class:`~repro.plug.protocols.PriorityAsyncModel`
+    scheduling state AND the three hooks exactly as ``AsyncModel``
+    implements them — the fused step never calls the hooks, so a
+    subclass overriding any of them must keep the host loop that does
+    (the same rule :func:`_model_is_fusable` applies to BSP/GAS)."""
+    if not isinstance(model, PriorityAsyncModel):
+        return False
+    cls = type(model)
+    return all(getattr(cls, h, None) is getattr(AsyncModel, h)
+               for h in _MODEL_HOOKS)
 
 
 def make_apply_fn(program: VertexProgram):
@@ -157,7 +179,8 @@ class Middleware:
         self.stats = SyncStats()
         self._caches: list[LRUVertexCache] = []  # created per-run by run()
         self._estimator = CapacityEstimator(self.num_shards)
-        self._fused = self._detect_fused()
+        self._fused_kind = self._detect_fused()
+        self._fused = self._fused_kind is not None
         if self._fused:
             self.daemon.bind_shards(self.blocksets, mesh=self.upper.mesh,
                                     axis=self.upper.axis)
@@ -182,15 +205,31 @@ class Middleware:
                           for p in self.partitions]
         self.vblock_size = vb
 
-    def _detect_fused(self) -> bool:
-        """The fused device-resident loop needs three capabilities: a
-        shard-capable daemon, an upper system that merges device
-        partials over an exact wire, and a computation-model order the
-        fused step realizes (BSP/GAS — identical trajectories)."""
-        return (isinstance(self.daemon, ShardCapableDaemon)
+    def _detect_fused(self) -> str | None:
+        """Which fused device-resident loop (if any) this composition
+        gets.  Both need a shard-capable daemon and an upper system that
+        merges device partials over an exact wire; the model then picks
+        the step: BSP/GAS orders share one barriered step (``"bsp"`` —
+        identical trajectories), a priority/async model
+        (:class:`~repro.plug.protocols.PriorityAsyncModel`) gets the
+        staleness-carrying async step (``"async"``), anything else
+        returns None and keeps the host loop that drives its hooks
+        verbatim."""
+        caps = (isinstance(self.daemon, ShardCapableDaemon)
                 and isinstance(self.upper, DevicePartialUpper)
-                and getattr(self.upper, "wire", "exact") == "exact"
-                and _model_is_fusable(self.model))
+                and getattr(self.upper, "wire", "exact") == "exact")
+        if not caps:
+            return None
+        if _model_is_fusable(self.model):
+            return "bsp"
+        # The async step additionally needs the upper system's async
+        # merge cadence — DevicePartialUpper alone doesn't promise it,
+        # and a miss must fall back, not crash.
+        if (_async_model_is_fusable(self.model)
+                and callable(getattr(self.upper, "merge_partials_async",
+                                     None))):
+            return "async"
+        return None
 
     # -- the drive loop ---------------------------------------------------
     def run(self, max_iterations: int | None = None) -> Result:
@@ -203,8 +242,9 @@ class Middleware:
             for _ in range(self.num_shards)
         ]
         if self._loop is None:
-            self._loop = (DriveLoop(self) if self._fused
-                          else HostDriveLoop(self))
+            loops = {"bsp": DriveLoop, "async": AsyncDriveLoop,
+                     None: HostDriveLoop}
+            self._loop = loops[self._fused_kind](self)
         return self._loop.run(max_iterations)
 
     # -- Lemma-2 rebalancing ----------------------------------------------
@@ -281,7 +321,9 @@ class HostDriveLoop:
     # -- one shard's Gen + per-block Merge ---------------------------------
     def _shard_aggregate(self, j: int, state_j: np.ndarray, aux: np.ndarray,
                          active_j: np.ndarray | None, record: dict):
-        """Agent work for shard j → (N,K) aggregate, (N,) counts, read ids."""
+        """Agent work for shard j → (N,K) aggregate, (N,) counts, and the
+        boundary read ids of the blocks that ran (the exchange's query
+        set)."""
         mw = self.mw
         bs = mw.blocksets[j]
         o = mw.options
@@ -329,7 +371,7 @@ class HostDriveLoop:
         # this shard's EMA'd cost by orders of magnitude.
         if not compiling:
             mw._estimator.update(j, entities, busy)
-        return agg, cnt, read_ids
+        return agg, cnt, boundary_reads.astype(np.int64)
 
     def run(self, max_iterations: int | None = None) -> Result:
         mw = self.mw
@@ -364,6 +406,7 @@ class HostDriveLoop:
 
             aggs = [r[0] for r in results]
             cnts = [r[1] for r in results]
+            reads = [r[2] for r in results]
 
             # Local candidate apply (needed for skip detection).
             new_states, new_actives, updated_ids = [], [], []
@@ -390,7 +433,7 @@ class HostDriveLoop:
                 # Global merge ("upper system synchronization").
                 states, actives = self._global_sync(
                     states, aggs, cnts, aux, it,
-                    updated_ids, boundary_masks, rowbytes, rec)
+                    updated_ids, boundary_masks, reads, rowbytes, rec)
 
             rec["active"] = int(np.max([a.sum() for a in actives]))
             per_iter.append(rec)
@@ -410,15 +453,17 @@ class HostDriveLoop:
         )
 
     def _global_sync(self, states, aggs, cnts, aux, it,
-                     updated_ids, boundary_masks, rowbytes, rec):
+                     updated_ids, boundary_masks, reads, rowbytes, rec):
         mw = self.mw
         o = mw.options
         # Byte accounting: dense exchange vs lazy upload (Alg. 3).
         mw.stats.dense_bytes += mw.num_shards * mw.n * mw.k * 4
-        queried = []
-        for j in range(mw.num_shards):
-            reads = np.unique(mw.blocksets[j].gsrc[mw.blocksets[j].emask])
-            queried.append(reads[boundary_masks[j][reads]].astype(np.int64))
+        # The query set is what the exchange actually needs: the boundary
+        # reads of the blocks that were runnable this iteration, already
+        # boundary-filtered by the gather.  Regression: deriving it from
+        # every edge in the blockset over-counted lazy_bytes whenever
+        # frontier block skipping ran a subset.
+        queried = list(reads)
         upd_boundary = [
             u[boundary_masks[j][u]].astype(np.int64)
             for j, u in enumerate(updated_ids)
@@ -427,8 +472,12 @@ class HostDriveLoop:
         mw.stats.lazy_bytes += int(sum(u.size for u in uploads)) * rowbytes
         mw.stats.lazy_bytes += int(gqq.size) * 8  # query-queue broadcast
         if o.sync_caching:
-            changed = np.unique(np.concatenate([u for u in uploads] or
-                                               [np.empty(0, np.int64)]))
+            # Invalidate every updated boundary vertex, not just this
+            # round's uploads: a vertex whose consumers' blocks were all
+            # skipped this iteration is uploaded only when next queried,
+            # but its cached copies are stale the moment it changes.
+            changed = np.unique(np.concatenate(
+                [u for u in upd_boundary] or [np.empty(0, np.int64)]))
             for c in mw._caches:
                 c.invalidate(changed)
 
@@ -441,7 +490,80 @@ class HostDriveLoop:
         ]
 
 
-class DriveLoop:
+class _FusedLoopBase:
+    """Shared scaffolding of the device-resident fused drive loops.
+
+    Subclasses define the jitted step (:meth:`_build_step`), the carry
+    it threads between iterations (:meth:`_init_carry` — element 0 must
+    be the vertex state), and :meth:`_advance`, which runs one step and
+    returns ``(carry', done, n_active, blocks_run, extra_rec)``.  The
+    base class owns everything both loops share: placement of the
+    replicated state/aux/frontier, the iteration loop, per-iteration
+    records, and the single final-state materialization.
+    """
+
+    def __init__(self, mw: Middleware):
+        self.mw = mw
+        self._step = None
+
+    def _build_step(self):
+        raise NotImplementedError
+
+    def _init_carry(self, state, active):
+        raise NotImplementedError
+
+    def _advance(self, carry, aux, it, stacked):
+        raise NotImplementedError
+
+    def run(self, max_iterations: int | None = None) -> Result:
+        mw = self.mw
+        prog = mw.program
+        mw.upper.reset()
+        max_it = max_iterations or prog.max_iterations
+        state0, aux = prog.init(mw.graph)
+        rep = jax.sharding.NamedSharding(mw.daemon.mesh,
+                                         jax.sharding.PartitionSpec())
+        state = jax.device_put(state0, rep)
+        aux_dev = jax.device_put(aux, rep)
+        active = jax.device_put(np.ones(mw.n, dtype=bool), rep)
+        carry = self._init_carry(state, active)
+        stacked = mw.daemon.stacked
+        if self._step is None:
+            self._step = self._build_step()
+        blocks_total = int(sum(bs.num_blocks for bs in mw.blocksets))
+        per_iter: list[dict] = []
+        t0 = time.perf_counter()
+        it = 0
+        converged = False
+
+        for it in range(1, max_it + 1):
+            carry, done, n_active, blocks_run, extra = self._advance(
+                carry, aux_dev, jnp.int32(it), stacked)
+            mw.stats.rounds_total += 1
+            shard_blocks = [int(x) for x in jax.device_get(blocks_run)]
+            rec = {"iteration": it, "fused": True,
+                   "blocks_total": blocks_total,
+                   "blocks_run": int(sum(shard_blocks)),
+                   "shard_blocks_run": shard_blocks,
+                   "active": int(n_active)}
+            rec.update(extra)
+            per_iter.append(rec)
+            if bool(done):
+                converged = True
+                break
+
+        final = np.asarray(carry[0])  # the run's single device→host transfer
+        return Result(
+            state=final,
+            iterations=it,
+            converged=converged,
+            stats=mw.stats,
+            wall_time=time.perf_counter() - t0,
+            per_iteration=per_iter,
+        )
+
+
+class DriveLoop(_FusedLoopBase):
     """Device-resident fused drive loop (the sharded fast path).
 
     One jitted step per iteration composes the sharded daemon's
@@ -461,10 +583,6 @@ class DriveLoop:
     to.
     """
 
-    def __init__(self, mw: Middleware):
-        self.mw = mw
-        self._step = None
-
     def _build_step(self):
         mw = self.mw
         daemon, upper, apply_fn = mw.daemon, mw.upper, mw._apply_fn
@@ -483,47 +601,109 @@ class DriveLoop:
 
         return jax.jit(step)
 
-    def run(self, max_iterations: int | None = None) -> Result:
+    def _init_carry(self, state, active):
+        return (state, active)
+
+    def _advance(self, carry, aux, it, stacked):
+        state, active, done, n_active, blocks_run = self._step(
+            *carry, aux, it, stacked)
+        return (state, active), done, n_active, blocks_run, {}
+
+
+class AsyncDriveLoop(_FusedLoopBase):
+    """Device-resident fused drive loop of the asynchronous priority model.
+
+    Like :class:`DriveLoop`, one jitted step per iteration — but the
+    step additionally carries the model's scheduling state on the mesh:
+
+    * **held partials/counts** ``(m, N, K)`` / ``(m, N)`` — the
+      aggregate each device last *shipped*.  Every step recomputes the
+      fresh per-device partials, and the upper system's
+      :meth:`~repro.plug.uppers.MeshUpperSystem.merge_partials_async`
+      cadence decides per device whether this round's collective
+      consumes fresh or held: a device whose contribution moved less
+      than the priority threshold holds (its consumers keep reading the
+      stale aggregate — the async middleware semantics), the rest
+      refresh.
+    * **frontier backlog** ``(m, N)`` — for frontier-driven programs,
+      the sources that activated while a device held.  The device's next
+      run uses the backlog as its private frontier (per-device ``active``
+      in ``run_all_shards``), so a message suppressed during a hold is
+      re-generated from the source's *current* state on refresh — no
+      update is ever lost, which is what makes the fixed point exact.
+    * **theta** — the priority threshold: starts at the model's
+      ``theta0``, decays by ``decay`` every iteration, and collapses to
+      0 the moment the frontier drains, forcing the tail of the run
+      into barriered (BSP-equivalent) steps.
+
+    Convergence is only reported on an iteration where every device
+    refreshed and no backlog is pending, so a drained frontier under
+    staleness can never terminate the run early.  Host traffic per
+    iteration stays O(1) scalars (plus the tiny per-shard blocks-run
+    vector), exactly as in :class:`DriveLoop`.
+    """
+
+    def _build_step(self):
         mw = self.mw
-        prog = mw.program
-        mw.upper.reset()
-        max_it = max_iterations or prog.max_iterations
-        state0, aux = prog.init(mw.graph)
-        rep = jax.sharding.NamedSharding(mw.daemon.mesh,
-                                         jax.sharding.PartitionSpec())
-        state = jax.device_put(state0, rep)
-        aux_dev = jax.device_put(aux, rep)
-        active = jax.device_put(np.ones(mw.n, dtype=bool), rep)
-        stacked = mw.daemon.stacked
-        if self._step is None:
-            self._step = self._build_step()
-        blocks_total = int(sum(bs.num_blocks for bs in mw.blocksets))
-        per_iter: list[dict] = []
-        t0 = time.perf_counter()
-        it = 0
-        converged = False
+        daemon, upper, apply_fn = mw.daemon, mw.upper, mw._apply_fn
+        model = mw.model
+        decay = float(model.decay)
+        floor = float(model.floor)
+        use_frontier = (mw.program.frontier_driven
+                        and mw.options.frontier_block_skipping)
 
-        for it in range(1, max_it + 1):
-            state, active, done, n_active, blocks_run = self._step(
-                state, active, aux_dev, jnp.int32(it), stacked)
-            mw.stats.rounds_total += 1
-            shard_blocks = [int(x) for x in jax.device_get(blocks_run)]
-            rec = {"iteration": it, "fused": True,
-                   "blocks_total": blocks_total,
-                   "blocks_run": int(sum(shard_blocks)),
-                   "shard_blocks_run": shard_blocks,
-                   "active": int(n_active)}
-            per_iter.append(rec)
-            if bool(done):
-                converged = True
-                break
+        def step(state, active, backlog, held_p, held_c, theta, aux, it,
+                 stacked):
+            if use_frontier:
+                # deliver each device its private backlog ∪ the new
+                # frontier; consumed below when the device refreshes
+                backlog = backlog | active[None, :]
+                fresh_p, fresh_c, blocks_run = daemon.run_all_shards(
+                    state, aux, backlog, stacked=stacked)
+            else:
+                fresh_p, fresh_c, blocks_run = daemon.run_all_shards(
+                    state, aux, None, stacked=stacked)
+            agg, cnt, held_p, held_c, refreshed = upper.merge_partials_async(
+                fresh_p, fresh_c, held_p, held_c, theta, floor)
+            if use_frontier:
+                backlog = backlog & ~refreshed[:, None]
+            new_state, new_active = apply_fn(state, agg, cnt > 0, aux, it)
+            n_active = new_active.sum()
+            pending = (backlog.any() if use_frontier
+                       else jnp.asarray(False))
+            all_fresh = refreshed.all()
+            done = (n_active == 0) & all_fresh & ~pending
+            # the threshold decays every iteration and collapses the
+            # moment the frontier drains: the tail of the run is
+            # barriered, so convergence is certified on fresh data
+            theta = jnp.where(n_active == 0, 0.0, theta * decay)
+            return (new_state, new_active, backlog, held_p, held_c, theta,
+                    done, n_active, refreshed.sum(), blocks_run)
 
-        final = np.asarray(state)  # the run's single device→host transfer
-        return Result(
-            state=final,
-            iterations=it,
-            converged=converged,
-            stats=mw.stats,
-            wall_time=time.perf_counter() - t0,
-            per_iteration=per_iter,
-        )
+        return jax.jit(step)
+
+    def _init_carry(self, state, active):
+        mw = self.mw
+        m = mw.daemon.m
+        # Carries shard their leading (device) axis over the upper's
+        # mesh axis — built from the DevicePartialUpper protocol's
+        # public mesh/axis, so any conforming upper system works.
+        shard = jax.sharding.NamedSharding(
+            mw.upper.mesh, jax.sharding.PartitionSpec(mw.upper.axis))
+        # scheduling state starts all-stale-at-identity: first fresh
+        # partials score maximal priority wherever any message exists
+        held_p = jax.device_put(
+            np.full((m, mw.n, mw.k), mw.program.monoid.identity,
+                    np.float32), shard)
+        held_c = jax.device_put(np.zeros((m, mw.n), np.int32), shard)
+        backlog = jax.device_put(np.zeros((m, mw.n), dtype=bool), shard)
+        return (state, active, backlog, held_p, held_c,
+                jnp.float32(mw.model.theta0))
+
+    def _advance(self, carry, aux, it, stacked):
+        (state, active, backlog, held_p, held_c, theta, done, n_active,
+         n_refreshed, blocks_run) = self._step(*carry, aux, it, stacked)
+        extra = {"async": True, "refreshed": int(n_refreshed),
+                 "devices": self.mw.daemon.m, "theta": float(theta)}
+        return ((state, active, backlog, held_p, held_c, theta),
+                done, n_active, blocks_run, extra)

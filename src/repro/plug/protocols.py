@@ -19,8 +19,9 @@ each and never inspects which one it got:
   merges with ``shard_map`` collectives (``repro.dist``).
 * :class:`ComputationModel` — the strategy ordering Gen/Merge/Apply.
   BSP gathers aggregates inside the superstep; GAS scatters at the end
-  of the previous one.  New models (async, priority) implement the same
-  three hooks.
+  of the previous one; the asynchronous priority model
+  (``plug.computation.AsyncModel``) drops the superstep barrier
+  entirely.  New models implement the same three hooks.
 
 Implementations register under a name (``plug.register_daemon`` etc.) so
 callers can select backends by string; passing an instance works too.
@@ -125,7 +126,12 @@ class ShardCapableDaemon(Protocol):
 
     def run_all_shards(self, state, aux, active=None, *, stacked=None):
         """Traceable: all shards' Gen + Merge + per-device combine →
-        ``(partials (m, N, K), counts (m, N), blocks_run (S,))``."""
+        ``(partials (m, N, K), counts (m, N), blocks_run (S,))``.
+
+        ``active`` is either a replicated ``(N,)`` frontier shared by
+        every device, or — for the fused async loop's per-device backlog
+        — an ``(m, N)`` array sharded over the mesh axis, each row that
+        device's private frontier."""
         ...
 
 
@@ -187,6 +193,41 @@ class DevicePartialUpper(Protocol):
 # ``gather`` passed to a ComputationModel: calls every shard's daemon and
 # returns the per-shard (agg, cnt, read_ids) results for this iteration.
 GatherFn = Callable[[dict], Sequence[tuple]]
+
+
+@runtime_checkable
+class PriorityAsyncModel(Protocol):
+    """Optional computation-model capability: asynchronous priority
+    scheduling (``plug.computation.AsyncModel`` implements it).
+
+    A model exposing this state — the initial priority threshold, its
+    per-iteration decay, and the floor at or below which every producer
+    is forced fresh — is feature-detected by the middleware, which (with
+    a shard-capable daemon and an exact-wire device-partial upper system
+    that also provides the ``merge_partials_async`` cadence, as
+    ``MeshUpperSystem`` does) runs the fused *async* drive loop instead
+    of silently falling back to the host path: per-device held partials,
+    the frontier backlog, and the decaying threshold all live on the
+    mesh (``plug.middleware.AsyncDriveLoop``).  The fused step never
+    calls the three hooks, so — exactly as for BSP/GAS fusion — a
+    subclass overriding any hook keeps the host loop that drives them.
+    On any other component combination the model's hooks drive the host
+    loop, where the global barrier makes every aggregate the freshest
+    available.
+    """
+
+    theta0: float
+    decay: float
+    floor: float
+
+    def prologue(self, gather):
+        ...
+
+    def aggregates(self, gather, pending, record):
+        ...
+
+    def epilogue(self, gather, record):
+        ...
 
 
 @runtime_checkable

@@ -158,8 +158,13 @@ class MeshUpperSystem(HostUpperSystem):
         return jax.device_put(arr, sh)
 
     def reset(self):
-        # error-feedback residual is per-run state; stats accumulate
+        # Per-run state: the error-feedback residual AND the wire
+        # counters (regression: a second run() on the same instance
+        # reported inflated exact/compressed byte totals — the stats and
+        # LRU caches were reset at run() entry but the wire counters
+        # were not).
         self._residual = None
+        self.wire_stats = {"exact_bytes": 0, "compressed_bytes": 0}
 
     def _build_merge(self, s_per_dev: int, with_agg: bool):
         import jax
@@ -288,6 +293,46 @@ class MeshUpperSystem(HostUpperSystem):
         if self._pmerge_fn is None:
             self._pmerge_fn = self._build_pmerge()
         return self._pmerge_fn(partials, counts)
+
+    def merge_partials_async(self, fresh_p, fresh_c, held_p, held_c,
+                             theta, floor):
+        """Async merge cadence: the fused *async* drive loop's upper half.
+
+        Decides, per device, whether this round's collective consumes
+        the device's fresh partial or the stale one it last shipped:
+
+        1. fresh partials are canonicalized to the monoid identity
+           wherever the device delivered no message (segment reductions
+           fill empty segments with ±inf, which is merge-equivalent to
+           the identity but must not register as priority);
+        2. each device's priority is how far its fresh contribution
+           moved from its held copy (L∞ over values and counts);
+        3. devices at or above ``theta`` refresh — all of them, once
+           ``theta`` has decayed to ``floor`` — the rest hold;
+        4. the chosen partials reduce through the same collective
+           :meth:`merge_partials` uses.
+
+        Traceable (called inside the fused step's jit).  Returns
+        ``(agg, cnt, held_p, held_c, refreshed)``: the merged
+        aggregate/counts, the next iteration's held copies, and the
+        (m,) bool refresh mask.
+        """
+        import jax.numpy as jnp
+
+        if self.wire != "exact":
+            raise ValueError("merge_partials_async supports wire='exact' "
+                             "only; compressed merges take the classic path")
+        ident = self.monoid.identity
+        fresh_p = jnp.where((fresh_c > 0)[..., None], fresh_p, ident)
+        pri = jnp.max(jnp.abs(fresh_p - held_p), axis=(1, 2))
+        pri = jnp.maximum(
+            pri, jnp.max(jnp.abs(fresh_c - held_c).astype(jnp.float32),
+                         axis=1))
+        refreshed = (pri >= theta) | (theta <= floor)
+        held_p = jnp.where(refreshed[:, None, None], fresh_p, held_p)
+        held_c = jnp.where(refreshed[:, None], fresh_c, held_c)
+        agg, cnt = self.merge_partials(held_p, held_c)
+        return agg, cnt, held_p, held_c, refreshed
 
 
 # --------------------------------------------------------------------------

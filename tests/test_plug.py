@@ -30,7 +30,12 @@ _ALGS = {
 
 _graph_cache: dict = {}
 _ref_cache: dict = {}
+_cref_cache: dict = {}
 _legacy_cache: dict = {}
+
+# async follows its own trajectory, so its rows compare at the fixed
+# point (run to convergence) instead of at the MAX_IT truncation
+ASYNC_MAX_IT = 300
 
 
 def _graph(alg):
@@ -46,6 +51,14 @@ def _reference(alg):
         _ref_cache[alg] = plug.run_reference(g, _ALGS[alg](g),
                                              max_iterations=MAX_IT)[0]
     return _ref_cache[alg]
+
+
+def _converged_reference(alg):
+    if alg not in _cref_cache:
+        g = _graph(alg)
+        _cref_cache[alg] = plug.run_reference(g, _ALGS[alg](g),
+                                              max_iterations=ASYNC_MAX_IT)[0]
+    return _cref_cache[alg]
 
 
 def _legacy(alg, model):
@@ -66,29 +79,49 @@ def _compare(a, b, atol=1e-5):
 
 
 @pytest.mark.parametrize("alg", sorted(_ALGS))
-@pytest.mark.parametrize("model", ["bsp", "gas"])
+@pytest.mark.parametrize("model", ["bsp", "gas", "async"])
 @pytest.mark.parametrize("upper", ["host", "mesh"])
 @pytest.mark.parametrize("daemon", ["reference", "sharded"])
 def test_equivalence_matrix(alg, model, upper, daemon):
     """plug.Middleware ≡ run_reference ≡ legacy GXEngine over the full
     {algorithm} × {computation model} × {upper system} × {daemon}
     matrix; daemon="sharded" × upper="mesh" exercises the device-
-    resident fused drive loop, ×"host" its classic-path fallback."""
+    resident fused drive loop (the async fused step for model="async"),
+    ×"host" its classic-path fallback.  BSP/GAS rows follow identical
+    trajectories and compare at MAX_IT; async follows its own schedule
+    and compares at the fixed point."""
     g = _graph(alg)
     prog = _ALGS[alg](g)
     mw = plug.Middleware(g, prog, daemon=daemon, upper=upper,
                          model=model, num_shards=SHARDS,
                          options=plug.PlugOptions(block_size=BLOCK))
-    res = mw.run(max_iterations=MAX_IT)
-    ref = _reference(alg)
-    _compare(ref, res.state)
-    _compare(_legacy(alg, model), res.state)
-    if prog.monoid.idempotent:
-        # min/max merges are exact selections — every layer (daemon
-        # blocks, host fold, mesh collectives, the fused sharded step)
-        # must agree bit for bit
-        np.testing.assert_array_equal(ref, res.state)
+    if model == "async":
+        res = mw.run(max_iterations=ASYNC_MAX_IT)
+        assert res.converged
+        ref = _converged_reference(alg)
+        if prog.monoid.idempotent:
+            # async reordering only changes *when* a min/max improvement
+            # lands, never its value — the fixed point is bit-exact
+            np.testing.assert_array_equal(ref, res.state)
+        else:
+            # sum-monoid chaotic iteration: same fixed point to within
+            # the programs' activity tolerance
+            np.testing.assert_allclose(res.state, ref, atol=1e-6,
+                                       rtol=1e-5)
+    else:
+        res = mw.run(max_iterations=MAX_IT)
+        ref = _reference(alg)
+        _compare(ref, res.state)
+        _compare(_legacy(alg, model), res.state)
+        if prog.monoid.idempotent:
+            # min/max merges are exact selections — every layer (daemon
+            # blocks, host fold, mesh collectives, the fused sharded
+            # step) must agree bit for bit
+            np.testing.assert_array_equal(ref, res.state)
     assert mw._fused == (daemon == "sharded" and upper == "mesh")
+    expected_kind = ("async" if model == "async" else "bsp") if mw._fused \
+        else None
+    assert mw._fused_kind == expected_kind
 
 
 def test_mesh_upper_system_bit_identical_to_reference():
@@ -203,6 +236,92 @@ def test_stats_and_caches_reset_between_runs():
     assert second == first
 
 
+def test_wire_stats_reset_between_runs():
+    """Regression: MeshUpperSystem.wire_stats accumulated across run()
+    calls — stats and LRU caches were reset at run() entry but the wire
+    counters were not, so second-run exact/compressed bytes doubled."""
+    g = _graph("sssp_bf")
+    prog = sssp_bf(g)
+    upper = plug.MeshUpperSystem()
+    mw = plug.Middleware(g, prog, daemon="reference", upper=upper,
+                         num_shards=SHARDS,
+                         options=plug.PlugOptions(block_size=BLOCK))
+    mw.run(max_iterations=MAX_IT)
+    first = dict(upper.wire_stats)
+    mw.run(max_iterations=MAX_IT)
+    second = dict(upper.wire_stats)
+    assert first["exact_bytes"] > 0
+    assert second == first
+
+    comp = plug.MeshUpperSystem(wire="compressed")
+    mw = plug.Middleware(g, pagerank(_graph("pagerank")), upper=comp,
+                         num_shards=SHARDS,
+                         options=plug.PlugOptions(block_size=BLOCK))
+    mw.run(max_iterations=6)
+    first = dict(comp.wire_stats)
+    mw.run(max_iterations=6)
+    assert first["compressed_bytes"] > 0
+    assert dict(comp.wire_stats) == first
+
+
+def test_unknown_monoid_raises_instead_of_max_merging():
+    """Regression: the blocked/pipelined upload and the naive per-edge
+    loop dispatched on monoid.name with a bare else that silently
+    max-merged any custom monoid; dispatch now goes through the monoid
+    object and raises for a monoid with no known host rule."""
+    import dataclasses
+
+    from repro.core.template import Monoid
+
+    weird = Monoid("product", 1.0, lambda a, b: a * b, idempotent=False)
+
+    # the unit seam both daemons now share
+    out = np.zeros((4, 1), np.float32)
+    with pytest.raises(ValueError, match="product"):
+        weird.scatter_at(out, np.array([0, 1]), np.ones((2, 1), np.float32))
+    out = np.full((4, 1), 5.0, np.float32)
+    Monoid("min", np.inf, np.minimum, idempotent=True).scatter_at(
+        out, np.array([1, 1]), np.array([[3.0], [4.0]], np.float32))
+    np.testing.assert_array_equal(out[:, 0], [5.0, 3.0, 5.0, 5.0])
+
+    # end-to-end: every daemon refuses the unknown monoid — the host
+    # scatters through Monoid.scatter_at, the reference kernel through
+    # Monoid.segment_reduce, and the Pallas kernel's merge dispatch
+    # (which used to silently max-merge) at trace time
+    g = _graph("pagerank")
+    prog = dataclasses.replace(pagerank(g), monoid=weird)
+    for daemon in ("naive", "blocked", "pipelined", "reference", "pallas"):
+        mw = plug.Middleware(g, prog, daemon=daemon, num_shards=1,
+                             options=plug.PlugOptions(block_size=BLOCK))
+        with pytest.raises(ValueError, match="product"):
+            mw.run(max_iterations=2)
+
+
+def test_lazy_bytes_track_runnable_blocks_only():
+    """Regression: _global_sync derived the query set from every edge in
+    the blockset even when frontier block skipping ran a subset,
+    over-counting lazy_bytes relative to what the exchange needs."""
+    g = _graph("sssp_bf")
+    prog = sssp_bf(g)
+
+    def run(skip):
+        mw = plug.Middleware(
+            g, prog, daemon="reference", num_shards=SHARDS,
+            options=plug.PlugOptions(block_size=BLOCK,
+                                     frontier_block_skipping=skip,
+                                     sync_skipping=False))
+        return mw.run(max_iterations=MAX_IT)
+
+    skipping, full = run(True), run(False)
+    # block skipping is result-invariant (idempotent monoid) …
+    np.testing.assert_array_equal(skipping.state, full.state)
+    assert any(r["blocks_run"] < r["blocks_total"]
+               for r in skipping.per_iteration)
+    # … but the lazy exchange only queries for the blocks that ran
+    assert skipping.stats.lazy_bytes < full.stats.lazy_bytes
+    assert skipping.stats.dense_bytes == full.stats.dense_bytes
+
+
 def test_mesh_compressed_wire_rejects_idempotent():
     g = _graph("sssp_bf")
     with pytest.raises(ValueError, match="idempotent"):
@@ -251,7 +370,7 @@ def test_registries_list_shipped_components():
     assert {"vectorized", "reference", "pallas", "sharded", "blocked",
             "pipelined", "naive"} <= set(plug.daemon_names())
     assert {"host", "mesh"} <= set(plug.upper_system_names())
-    assert {"bsp", "gas"} <= set(plug.model_names())
+    assert {"bsp", "gas", "async"} <= set(plug.model_names())
 
 
 def test_gxengine_shim_warns_exactly_once():

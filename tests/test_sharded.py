@@ -148,6 +148,123 @@ def test_sharded_daemon_falls_back_without_device_partial_upper():
     assert not any(rec.get("fused") for rec in res.per_iteration)
 
 
+def test_sharded_pallas_kernel_bit_identical_to_reference():
+    """Acceptance: get_daemon("sharded", kernel="pallas") routes the
+    shard_map body through the Pallas edge-block kernel and is
+    bit-identical to kernel="reference" — and to the vectorized pallas
+    daemon — for an idempotent monoid (the kernels share one
+    BLOCK_PARTIALS dispatch)."""
+    g = _graph()
+    prog = sssp_bf(g)
+
+    def run(daemon, **kw):
+        mw = plug.Middleware(g, prog, daemon=daemon, num_shards=4,
+                             options=plug.PlugOptions(block_size=BLOCK), **kw)
+        return mw, mw.run(max_iterations=15)
+
+    mw_p, res_p = run(plug.get_daemon("sharded", kernel="pallas"),
+                      upper="mesh")
+    mw_r, res_r = run(plug.get_daemon("sharded", kernel="reference"),
+                      upper="mesh")
+    assert mw_p._fused and mw_r._fused  # pallas body runs the fused loop
+    assert mw_p.daemon.kernel == "pallas"
+    np.testing.assert_array_equal(res_p.state, res_r.state)
+
+    _, res_v = run("pallas")  # vectorized daemon, same kernel
+    np.testing.assert_array_equal(res_p.state, res_v.state)
+
+    ref, _ = plug.run_reference(g, prog, max_iterations=15)
+    np.testing.assert_array_equal(ref, res_p.state)
+
+
+def test_sharded_pallas_partials_match_reference_partials():
+    """run_all_shards itself (not just the end state) is bit-identical
+    across kernels: same (m, N, K) device partials, same counts."""
+    g = _graph()
+    prog = sssp_bf(g)
+    mws = {}
+    for kernel in ("reference", "pallas"):
+        mws[kernel] = plug.Middleware(
+            g, prog, daemon=plug.get_daemon("sharded", kernel=kernel),
+            upper="mesh", num_shards=4,
+            options=plug.PlugOptions(block_size=BLOCK))
+    state, aux = prog.init(g)
+    p_ref, c_ref, _ = mws["reference"].daemon.run_all_shards(state, aux)
+    p_pal, c_pal, _ = mws["pallas"].daemon.run_all_shards(state, aux)
+    np.testing.assert_array_equal(np.asarray(p_ref), np.asarray(p_pal))
+    np.testing.assert_array_equal(np.asarray(c_ref), np.asarray(c_pal))
+
+
+def test_async_model_runs_fused_with_staleness_and_exact_fixed_point():
+    """Acceptance: model="async" with the sharded daemon + mesh upper
+    runs the fused ASYNC device step (no silent host-path fallback),
+    actually exercises staleness (iterations where some device held its
+    partial), and still converges to the bit-exact reference fixed
+    point for an idempotent monoid."""
+    g = generate.rmat(384, 3000, seed=21)
+    prog = sssp_bf(g)
+    # theta0 high enough that post-warmup residuals sit under it: devices
+    # hold until the threshold decays below their priority
+    mw = plug.Middleware(g, prog, daemon="sharded", upper="mesh",
+                         model=plug.AsyncModel(theta0=10.0, decay=0.5),
+                         num_shards=8,
+                         options=plug.PlugOptions(block_size=BLOCK))
+    assert mw._fused and mw._fused_kind == "async"
+    res = mw.run(max_iterations=100)
+    assert res.converged
+    recs = res.per_iteration
+    assert all(r.get("fused") and r.get("async") for r in recs)
+    m = mw.daemon.m
+    assert all(r["devices"] == m for r in recs)
+    if m >= 2:
+        # staleness happened: some iteration merged a held partial
+        assert any(r["refreshed"] < m for r in recs)
+    # the final iteration certifies convergence on all-fresh data
+    assert recs[-1]["refreshed"] == m
+    # theta decays monotonically (collapsing to 0 when the frontier
+    # drains) — never grows
+    thetas = [r["theta"] for r in recs]
+    assert all(b <= a for a, b in zip(thetas, thetas[1:]))
+    ref, _ = plug.run_reference(g, prog, max_iterations=300)
+    np.testing.assert_array_equal(ref, res.state)
+
+
+def test_async_state_stays_on_mesh_between_iterations():
+    """The async fused loop keeps state AND its scheduling carries
+    (held partials, backlog) on the mesh: no vertex-sized host
+    materialization inside the iteration body."""
+    import jax
+
+    g = _graph()
+    prog = pagerank(g)
+    mw = plug.Middleware(g, prog, daemon="sharded", upper="mesh",
+                         model="async", num_shards=4,
+                         options=plug.PlugOptions(block_size=BLOCK))
+    assert mw._fused_kind == "async"
+    mw.run(max_iterations=2)  # compile outside the counted window
+
+    orig = np.asarray
+    counts = {}
+
+    def counting_asarray(a, *args, **kwargs):
+        if isinstance(a, jax.Array) and getattr(a, "size", 0) >= g.num_vertices:
+            counts["big"] = counts.get("big", 0) + 1
+        return orig(a, *args, **kwargs)
+
+    def run_counted(iters):
+        counts["big"] = 0
+        np.asarray = counting_asarray
+        try:
+            mw.run(max_iterations=iters)
+        finally:
+            np.asarray = orig
+        return counts["big"]
+
+    short, long = run_counted(3), run_counted(10)
+    assert short <= 1 and long <= 1
+    assert long == short
+
+
 def test_unknown_model_order_falls_back_to_host_loop():
     """The fused step realizes the BSP/GAS trajectory; a custom model
     with any other hook order must keep the host loop that drives its
@@ -176,6 +293,56 @@ def test_unknown_model_order_falls_back_to_host_loop():
                          model="gas", num_shards=2,
                          options=plug.PlugOptions(block_size=BLOCK))
     assert mw._fused
+
+
+def test_async_subclass_with_custom_hooks_keeps_host_loop():
+    """Same guard for the async step: it never calls the model hooks, so
+    an AsyncModel subclass overriding one must keep the host loop that
+    drives its hooks — a bare protocol isinstance would silently ignore
+    the override."""
+
+    class DeltaAsync(plug.AsyncModel):
+        name = "delta-async"
+
+        def aggregates(self, gather, pending, record):
+            record["delta"] = True
+            return gather(record)
+
+    g = _graph()
+    prog = sssp_bf(g)
+    mw = plug.Middleware(g, prog, daemon="sharded", upper="mesh",
+                         model=DeltaAsync(), num_shards=2,
+                         options=plug.PlugOptions(block_size=BLOCK))
+    assert mw._fused_kind is None and not mw._fused
+    res = mw.run(max_iterations=20)
+    assert any(r.get("delta") for r in res.per_iteration)  # hooks did run
+    ref, _ = plug.run_reference(g, prog, max_iterations=20)
+    np.testing.assert_array_equal(ref, res.state)
+
+
+def test_async_needs_upper_async_cadence_to_fuse():
+    """model="async" with an upper system that satisfies
+    DevicePartialUpper but lacks merge_partials_async must fall back to
+    the host loop, not crash inside the fused step."""
+    g = _graph()
+    prog = sssp_bf(g)
+
+    class NoCadenceUpper(plug.MeshUpperSystem):
+        merge_partials_async = None  # capability explicitly absent
+
+    upper = NoCadenceUpper()
+    mw = plug.Middleware(g, prog, daemon="sharded", upper=upper,
+                         model="async", num_shards=2,
+                         options=plug.PlugOptions(block_size=BLOCK))
+    assert mw._fused_kind is None
+    res = mw.run(max_iterations=20)
+    ref, _ = plug.run_reference(g, prog, max_iterations=20)
+    np.testing.assert_array_equal(ref, res.state)
+    # the same composition with the full MeshUpperSystem does fuse
+    mw2 = plug.Middleware(g, prog, daemon="sharded", upper="mesh",
+                          model="async", num_shards=2,
+                          options=plug.PlugOptions(block_size=BLOCK))
+    assert mw2._fused_kind == "async"
 
 
 def test_compressed_wire_disables_fused_loop():
