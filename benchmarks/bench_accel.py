@@ -21,6 +21,14 @@ Pallas runs in interpret mode off-TPU) × ``model={bsp, async}`` (the
 barriered fused step vs the priority/staleness async step), per-
 iteration steady-state times.
 
+A fault-recovery row (DESIGN.md §4.4) kills a device mid-run via
+``dist.fault.FailureSchedule`` and records what elastic recovery costs:
+iterations to reconverge after the checkpoint-free migration vs the
+uninterrupted run, the migration seconds (re-plan + re-stack + state
+``device_put``; the recompile for the smaller axis lands in the next
+iteration's wall time), and whether the recovered fixed point is
+bit-identical (it must be — sssp's min monoid is idempotent).
+
 ``--quick`` runs a reduced matrix and writes the ``BENCH_plug.json``
 tier-2 baseline (scripts/verify.sh --tier2).
 
@@ -44,6 +52,8 @@ if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
     os.environ["XLA_FLAGS"] = (
         os.environ.get("XLA_FLAGS", "")
         + " --xla_force_host_platform_device_count=8").strip()
+
+import numpy as np  # noqa: E402
 
 from benchmarks.common import DATASETS, save, timeit  # noqa: E402
 from repro import plug  # noqa: E402
@@ -104,6 +114,45 @@ def _sharded_matrix_times(g, prog, iters: int, *, block: int,
     return rows
 
 
+def _fault_recovery_row(g, *, block: int) -> dict:
+    """Kill-at-iteration-k elastic recovery on the fused sharded loop.
+
+    One uninterrupted sssp run to the fixed point, then the same
+    composition with ``FailureSchedule`` killing a device at iteration 3
+    — the run migrates onto the survivor mesh checkpoint-free and
+    reconverges.  Records iterations-to-reconverge vs the uninterrupted
+    count, the migration seconds, and the bit-identity of the recovered
+    fixed point (sssp's min monoid is idempotent, so anything but
+    ``True`` is a correctness regression, not noise).
+    """
+    prog = sssp_bf(g)
+
+    def build(failures=None):
+        return plug.Middleware(
+            g, prog, daemon="sharded", upper="mesh", num_shards=SHARDS,
+            failures=failures, options=plug.PlugOptions(block_size=block))
+
+    ref = build().run(max_iterations=300)
+    kill_it, kill_dev = 3, 2
+    res = build(plug.FailureSchedule(kills=[(kill_it, kill_dev)])).run(
+        max_iterations=300)
+    mig = next(r["migration"] for r in res.per_iteration
+               if "migration" in r)
+    if not (ref.converged and res.converged):
+        raise RuntimeError("fault-recovery row did not reconverge; "
+                           "refusing to record it as a baseline")
+    return {
+        "algorithm": "sssp_bf",
+        "kill": {"iteration": kill_it, "device": kill_dev},
+        "iterations_uninterrupted": ref.iterations,
+        "iterations_to_reconverge": res.iterations,
+        "migration_s": mig["seconds"],
+        "devices_before": mig["devices_before"],
+        "devices_after": mig["devices_after"],
+        "state_bit_identical": bool(np.array_equal(ref.state, res.state)),
+    }
+
+
 def run(small: bool = True, quick: bool = False) -> dict:
     g = DATASETS["orkut-mini"]()
     if quick:  # tier-2 CI slice: small graph, few iterations
@@ -152,6 +201,8 @@ def run(small: bool = True, quick: bool = False) -> dict:
                 "per_iter_s": matrix,
             },
         }
+    out["fault_recovery"] = _fault_recovery_row(g,
+                                                block=256 if quick else 1024)
     import jax
     out["_meta"] = {"api": "repro.plug.Middleware", "quick": quick,
                     "graph": {"num_vertices": g.num_vertices,
@@ -167,7 +218,16 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="tier-2 slice; writes BENCH_plug.json baseline")
     args = ap.parse_args()
-    for alg, r in run(quick=args.quick).items():
+    results = run(quick=args.quick)
+    fr = results.pop("fault_recovery")
+    print(f"fault-recovery ({fr['algorithm']}): kill dev "
+          f"{fr['kill']['device']} @ it {fr['kill']['iteration']} → "
+          f"{fr['devices_before']}→{fr['devices_after']} devices, "
+          f"migration {fr['migration_s']*1e3:.0f}ms, reconverged in "
+          f"{fr['iterations_to_reconverge']} its "
+          f"(uninterrupted {fr['iterations_uninterrupted']}), "
+          f"bit-identical={fr['state_bit_identical']}")
+    for alg, r in results.items():
         if alg.startswith("_"):
             continue
         print(f"{alg:12s} naive={r['naive']:.2f}s blocked={r['blocked']:.2f}s "

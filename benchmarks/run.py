@@ -56,7 +56,15 @@ def main():
 def _summarize(name, result):
     if name == "bench_accel":
         for alg, r in result.items():
-            print(f"    {alg}: {r['speedup_vectorized']:.1f}x accel")
+            # skip the non-algorithm entries (_meta, fault_recovery)
+            if isinstance(r, dict) and "speedup_vectorized" in r:
+                print(f"    {alg}: {r['speedup_vectorized']:.1f}x accel")
+        fr = result.get("fault_recovery")
+        if fr:
+            print(f"    fault-recovery: {fr['devices_before']}→"
+                  f"{fr['devices_after']} devices, "
+                  f"migration {fr['migration_s']*1e3:.0f}ms, "
+                  f"bit-identical={fr['state_bit_identical']}")
     elif name == "bench_sync":
         for ds, r in result.items():
             print(f"    {ds}: skip={r['skip_fraction']:.0%} "

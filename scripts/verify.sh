@@ -2,16 +2,28 @@
 # Tier-1 verify (ROADMAP.md): the full test suite with src/ on PYTHONPATH.
 # Extra args pass through to pytest, e.g. scripts/verify.sh -k sharding
 #
+# Fast fault slice (scripts/verify.sh --fault): only the elastic fault
+# tolerance surface — fault injection, migration, FleetMonitor /
+# FailureSchedule / elastic_plan / reassign_shards properties — for quick
+# iteration on dist/fault.py and the middleware's migrate path.
+#
 # Tier-2 (scripts/verify.sh --tier2): one production dry-run slice
 # (1 arch × 1 shape × both meshes, compiled on 512 fake devices) plus the
 # acceleration benchmark on the repro.plug API — including the
-# daemon="sharded" device-resident path on an 8-device host mesh and its
-# kernel={reference,pallas} × model={bsp,async} fused-loop matrix — which
-# records the BENCH_plug.json baseline under results/benchmarks/ so the
-# perf trajectory of the fused drive loop is tracked PR over PR.
+# daemon="sharded" device-resident path on an 8-device host mesh, its
+# kernel={reference,pallas} × model={bsp,async} fused-loop matrix, and a
+# kill-at-iteration-k elastic recovery row (iterations-to-reconverge,
+# migration seconds, fixed-point bit-identity) — which records the
+# BENCH_plug.json baseline under results/benchmarks/ so the perf
+# trajectory of the fused drive loop is tracked PR over PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--fault" ]]; then
+    shift
+    exec python -m pytest -q -k "fault or elastic" "$@"
+fi
 
 if [[ "${1:-}" == "--tier2" ]]; then
     shift

@@ -14,7 +14,11 @@ runs the same math continuously against a live fleet:
   preserved exactly and the *data* axis shrinks to the largest power of
   two that fits — bounded recompiles, and batch divisibility survives;
 * ``reassign_shards`` hands the orphaned data shards of dead hosts to
-  survivors in proportion to their Lemma-2 entitlement.
+  survivors in proportion to their Lemma-2 entitlement;
+* ``FailureSchedule`` is the deterministic fault-injection seam: "kill
+  device d at iteration k" (and optionally "report device d as taking s
+  seconds at iteration k"), consumed by ``plug.Middleware`` between
+  fused iterations so the whole elastic path is testable on a host mesh.
 
 Everything here is host-side numpy — no jax device state — so monitors
 can run in the launcher process of every host.
@@ -134,6 +138,66 @@ def reassign_shards(num_shards: int, fractions, *, cap: int | None = None
 
 
 # --------------------------------------------------------------------------
+# deterministic fault injection
+# --------------------------------------------------------------------------
+class FailureSchedule:
+    """Deterministic fault injection: kill device ``d`` at iteration ``k``.
+
+    The middleware polls the schedule between (fused) iterations; a kill
+    ``(k, d)`` fires at the first poll whose iteration is ≥ ``k`` — i.e.
+    the device dies *before* iteration ``k`` executes, so the state the
+    migration carries is exactly the state iteration ``k-1`` produced.
+    Every event fires exactly once, no matter how iterations are polled
+    (a converged run may never reach ``k``; the event then simply never
+    fires — ``exhausted`` reports it).
+
+    Args:
+      kills: iterable of ``(iteration, device)`` pairs.
+      slow: iterable of ``(iteration, device, seconds)`` — an injected
+        per-device step-time report (the straggler seam): at that
+        iteration the monitor records ``seconds`` for ``device``, as if
+        the device itself had reported it.
+    """
+
+    def __init__(self, kills=(), slow=()):
+        self._kills = sorted((int(k), int(d)) for k, d in kills)
+        self._slow = sorted((int(k), int(d), float(s)) for k, d, s in slow)
+        self._next_kill = 0
+        self._next_slow = 0
+
+    def kills_at(self, iteration: int) -> list[int]:
+        """Devices whose kill events fire at (or before) ``iteration``;
+        each event is consumed exactly once."""
+        out = []
+        while (self._next_kill < len(self._kills)
+               and self._kills[self._next_kill][0] <= iteration):
+            out.append(self._kills[self._next_kill][1])
+            self._next_kill += 1
+        return out
+
+    def slow_reports(self, iteration: int) -> list[tuple[int, float]]:
+        """``(device, seconds)`` step-time reports due at ``iteration``;
+        each is consumed exactly once."""
+        out = []
+        while (self._next_slow < len(self._slow)
+               and self._slow[self._next_slow][0] <= iteration):
+            _, d, s = self._slow[self._next_slow]
+            out.append((d, s))
+            self._next_slow += 1
+        return out
+
+    @property
+    def exhausted(self) -> bool:
+        return (self._next_kill == len(self._kills)
+                and self._next_slow == len(self._slow))
+
+    def reset(self) -> None:
+        """Re-arms every event (a fresh run against the same schedule)."""
+        self._next_kill = 0
+        self._next_slow = 0
+
+
+# --------------------------------------------------------------------------
 # fleet monitor
 # --------------------------------------------------------------------------
 class FleetMonitor:
@@ -160,7 +224,13 @@ class FleetMonitor:
         self._times[host].append(float(seconds))
 
     def mark_failed(self, host: int) -> None:
+        """Marks the host dead AND drops its recorded step-time window:
+        a dead host's samples must never leak into survivor capacities
+        (``batch_fractions``/``mean_times`` already mask dead hosts, but
+        clearing the window makes the property structural — no future
+        consumer can mix them back in)."""
         self._failed[host] = True
+        self._times[host].clear()
 
     @property
     def failed(self) -> np.ndarray:
@@ -169,6 +239,16 @@ class FleetMonitor:
     @property
     def alive_hosts(self) -> int:
         return int((~self._failed).sum())
+
+    def alive_indices(self) -> np.ndarray:
+        """Indices of the surviving hosts, ascending."""
+        return np.nonzero(~self._failed)[0]
+
+    @property
+    def observed(self) -> bool:
+        """True once any live host has a recorded step time."""
+        return any(len(d) > 0 for h, d in enumerate(self._times)
+                   if not self._failed[h])
 
     # -- derived views -----------------------------------------------------
     def mean_times(self) -> np.ndarray:

@@ -35,7 +35,16 @@ Register your own with ``register_daemon`` / ``register_upper_system`` /
 ``register_model`` — the drive loop never changes.  The legacy
 ``repro.core.engine.GXEngine`` remains as a deprecation shim over this
 package.
+
+Elastic fault tolerance (DESIGN.md §4.4): the fused composition also
+takes ``monitor=dist.fault.FleetMonitor(...)`` and/or
+``failures=dist.fault.FailureSchedule(kills=[(k, d)])`` — between fused
+iterations the middleware detects dead/straggling devices, re-plans the
+survivor mesh, reassigns orphaned shards (Lemma 2), migrates the live
+on-mesh state with ``device_put`` (no checkpoint restore), rebuilds the
+jitted step, and resumes; both classes are re-exported here.
 """
+from repro.dist.fault import FailureSchedule, FleetMonitor
 from repro.plug.computation import (BSP, GAS, AsyncModel, get_model,
                                     model_names, register_model)
 from repro.plug.daemons import (BlockedDaemon, NaiveDaemon, PipelinedDaemon,
@@ -44,8 +53,8 @@ from repro.plug.daemons import (BlockedDaemon, NaiveDaemon, PipelinedDaemon,
 from repro.plug.middleware import (AsyncDriveLoop, DriveLoop, HostDriveLoop,
                                    Middleware, make_apply_fn)
 from repro.plug.protocols import (ComputationModel, Daemon,
-                                  DevicePartialUpper, PlugOptions,
-                                  PriorityAsyncModel, Result,
+                                  DevicePartialUpper, ElasticUpper,
+                                  PlugOptions, PriorityAsyncModel, Result,
                                   ShardCapableDaemon, UpperSystem)
 from repro.plug.reference import run_reference
 from repro.plug.uppers import (HostUpperSystem, MeshUpperSystem,
@@ -55,7 +64,8 @@ from repro.plug.uppers import (HostUpperSystem, MeshUpperSystem,
 __all__ = [
     "BSP", "GAS", "AsyncDriveLoop", "AsyncModel", "BlockedDaemon",
     "ComputationModel", "Daemon", "DevicePartialUpper", "DriveLoop",
-    "HostDriveLoop", "HostUpperSystem", "MeshUpperSystem", "Middleware",
+    "ElasticUpper", "FailureSchedule", "FleetMonitor", "HostDriveLoop",
+    "HostUpperSystem", "MeshUpperSystem", "Middleware",
     "NaiveDaemon", "PipelinedDaemon", "PlugOptions", "PriorityAsyncModel",
     "Result", "ShardCapableDaemon", "ShardedDaemon", "UpperSystem",
     "VectorizedDaemon", "daemon_names", "get_daemon", "get_model",

@@ -224,6 +224,7 @@ class ShardedDaemon(VectorizedDaemon):
         self._auto_mesh = mesh is None
         self.axis = axis
         self._stacked = None
+        self._blocksets = None
         self._partials_fns: dict = {}
         self.num_shards = 0
         self.m = 0
@@ -256,6 +257,7 @@ class ShardedDaemon(VectorizedDaemon):
         if mesh is not None:
             self.mesh = mesh
             self._auto_mesh = False
+        self._blocksets = list(blocksets)
         s = len(blocksets)
         vbs = {bs.vblock_size for bs in blocksets}
         bbs = {bs.block_size for bs in blocksets}
@@ -300,6 +302,26 @@ class ShardedDaemon(VectorizedDaemon):
         }
         self._partials_fns = {}
         return self
+
+    def remesh(self, mesh, *, blocksets=None):
+        """Re-stacks the bound block tensors over a (smaller) survivor
+        mesh axis — the daemon half of checkpoint-free migration.
+
+        Each survivor's slice of the stacked leading axis grows from
+        ``s/m`` to ``s/m'`` shards; the compiled ``shard_map`` bodies
+        were built for the old axis length and are dropped (the rebind
+        clears them), so the fused drive loop's next step recompiles for
+        the new mesh.  ``blocksets`` replaces the bound shard layout
+        when the migration also re-partitioned or re-ordered shards
+        (orphaned shards reassigned to survivors); omitted, the layout
+        bound by the last ``bind_shards`` is re-placed as is.
+        """
+        if blocksets is None:
+            blocksets = self._blocksets
+            if blocksets is None:
+                raise RuntimeError(
+                    "ShardedDaemon.remesh called before bind_shards")
+        return self.bind_shards(blocksets, mesh=mesh, axis=self.axis)
 
     def _partials_fn(self, use_frontier: bool, per_device: bool = False):
         key = (use_frontier, per_device)

@@ -58,11 +58,12 @@ from repro.core.balance import CapacityEstimator, lemma2_fractions
 from repro.core.blocks import build_blocks
 from repro.core.sync import LRUVertexCache, SyncStats, can_skip_sync
 from repro.core.template import VertexProgram
+from repro.dist import fault as dist_fault
 from repro.graph.structure import EdgePartition, Graph
 from repro.plug.computation import BSP, GAS, AsyncModel, get_model
 from repro.plug.daemons import get_daemon
-from repro.plug.protocols import (DevicePartialUpper, PlugOptions,
-                                  PriorityAsyncModel, Result,
+from repro.plug.protocols import (DevicePartialUpper, ElasticUpper,
+                                  PlugOptions, PriorityAsyncModel, Result,
                                   ShardCapableDaemon)
 from repro.plug.uppers import get_upper_system
 
@@ -131,6 +132,17 @@ class Middleware:
         positive scale); shard sizes follow Lemma 2 so the slowest
         shard is no longer the makespan (paper Sec. III-C Case 1).
         Ignored when explicit ``partitions`` are given.
+      monitor: a :class:`~repro.dist.fault.FleetMonitor` with one slot
+        per device of the fused mesh — enables elastic fault tolerance
+        (DESIGN.md §4.4): between fused iterations the middleware polls
+        the monitor and, on a device failure or a fresh straggler,
+        migrates the live run onto a survivor mesh checkpoint-free.
+        Requires the fused device-resident loop (``daemon="sharded"``,
+        ``upper="mesh"`` with an exact wire).
+      failures: a :class:`~repro.dist.fault.FailureSchedule` injecting
+        deterministic kills/straggler reports into the monitor ("kill
+        device d at iteration k" — the test/bench seam).  Implies a
+        monitor (one is created if not given).
       options: :class:`~repro.plug.protocols.PlugOptions`.
     """
 
@@ -145,6 +157,8 @@ class Middleware:
         partitions: list[EdgePartition] | None = None,
         num_shards: int = 1,
         capacities=None,
+        monitor: "dist_fault.FleetMonitor | None" = None,
+        failures: "dist_fault.FailureSchedule | None" = None,
         options: PlugOptions | None = None,
     ):
         self.graph = graph
@@ -185,6 +199,35 @@ class Middleware:
             self.daemon.bind_shards(self.blocksets, mesh=self.upper.mesh,
                                     axis=self.upper.axis)
         self._loop = None
+
+        # -- elastic fault tolerance (DESIGN.md §4.4) ----------------------
+        self.monitor = monitor
+        self.failures = failures
+        self._mesh_device_ids: list[int] = []
+        self._handled_stragglers: set[int] = set()
+        if monitor is not None or failures is not None:
+            if not self._fused:
+                raise ValueError(
+                    "elastic fault tolerance (monitor=/failures=) needs the "
+                    "fused device-resident loop: a shard-capable daemon "
+                    "(daemon='sharded') with a device-partial upper system "
+                    "over an exact wire (upper='mesh') and a fusable model")
+            if not isinstance(self.upper, ElasticUpper):
+                raise ValueError(
+                    f"upper system {type(self.upper).__name__} cannot "
+                    "remesh/migrate (see plug.protocols.ElasticUpper)")
+            self.fleet_devices = list(np.asarray(self.upper.mesh.devices,
+                                                 dtype=object).reshape(-1))
+            m0 = len(self.fleet_devices)
+            if self.monitor is None:
+                self.monitor = dist_fault.FleetMonitor(num_hosts=m0,
+                                                       model_parallel=1)
+            if self.monitor.num_hosts != m0:
+                raise ValueError(
+                    f"monitor tracks {self.monitor.num_hosts} hosts but the "
+                    f"fused mesh has {m0} devices — one monitor slot per "
+                    "mesh device")
+            self._mesh_device_ids = list(range(m0))
 
     # -- setup ------------------------------------------------------------
     def _resolve_block_size(self) -> int:
@@ -247,6 +290,126 @@ class Middleware:
             self._loop = loops[self._fused_kind](self)
         return self._loop.run(max_iterations)
 
+    # -- elastic fault tolerance ------------------------------------------
+    def _poll_faults(self, it: int) -> dict | None:
+        """The between-iteration elastic check of the fused drive loops.
+
+        Feeds the failure schedule's due events into the monitor
+        (injected step-time reports, then kills), and migrates when
+        either a dead device sits in the active mesh or a straggler is
+        flagged for the first time.  Returns the migration record for
+        the iteration log, or None when the fleet is healthy.
+        """
+        mon = self.monitor
+        if mon is None:
+            return None
+        newly: list[int] = []
+        if self.failures is not None:
+            for dev, seconds in self.failures.slow_reports(it):
+                if not mon.failed[dev]:
+                    mon.record(dev, seconds)
+            for dev in self.failures.kills_at(it):
+                if not mon.failed[dev]:
+                    mon.mark_failed(dev)
+                    newly.append(dev)
+        failed = mon.failed
+        if any(failed[d] for d in self._mesh_device_ids):
+            return self.migrate(killed=newly)
+        if self._owns_partitions:
+            # like the failure branch: only stragglers that actually
+            # carry shards (sit in the active mesh) warrant a migration
+            fresh = [int(d) for d in np.nonzero(mon.stragglers())[0]
+                     if int(d) in self._mesh_device_ids
+                     and int(d) not in self._handled_stragglers]
+            if fresh:
+                self._handled_stragglers.update(fresh)
+                return self.migrate(stragglers=fresh)
+        return None
+
+    def migrate(self, *, killed=(), stragglers=()) -> dict:
+        """Checkpoint-free elastic migration onto the survivor mesh.
+
+        Re-plans the shard placement from the monitor's view of the
+        fleet and re-targets the fused composition:
+
+        1. the new mesh-axis length m' is the largest divisor of
+           ``num_shards`` the survivors can host, and the m' devices
+           with the highest Lemma-2 capacity are kept;
+        2. every shard — in particular the orphaned shards of dead
+           devices — is reassigned to a survivor with
+           :func:`repro.dist.fault.reassign_shards` (Lemma-2
+           entitlement, ``cap = num_shards // m'`` so the stacked
+           layout stays rectangular);
+        3. with capacity data (straggler/step-time reports), the graph
+           is re-partitioned so each device's shard slots carry edges
+           in proportion to its Lemma-2 fraction; without data — or on
+           caller-supplied partitions — the existing partitions are
+           kept and merely re-ordered onto their new devices
+           (bit-identical block math, different placement);
+        4. the upper system re-targets its collectives
+           (:meth:`~repro.plug.uppers.MeshUpperSystem.remesh`), the
+           daemon re-stacks its block tensors for the smaller axis
+           (:meth:`~repro.plug.daemons.ShardedDaemon.remesh`), and
+           busy-time samples recorded under the old placement are
+           dropped (the capacity estimator restarts — stale costs,
+           possibly measured on now-dead devices, must not leak into a
+           later :meth:`rebalance`).
+
+        The fused drive loop, which calls this via :meth:`_poll_faults`,
+        then ``device_put``s the carried vertex state onto the survivor
+        mesh and rebuilds its jitted step for the new axis size — no
+        checkpoint is ever restored.  Also callable directly after
+        ``monitor.mark_failed(...)`` for externally detected failures.
+        """
+        t0 = time.perf_counter()
+        mon = self.monitor
+        if mon is None:
+            raise ValueError("migrate() needs a Middleware(monitor=...)")
+        alive = [int(d) for d in mon.alive_indices()]
+        if not alive:
+            raise ValueError("no surviving devices to migrate onto")
+        m_new = 1
+        for d in range(min(self.num_shards, len(alive)), 0, -1):
+            if self.num_shards % d == 0:
+                m_new = d
+                break
+        frac_fleet = mon.batch_fractions()  # dead hosts are exactly 0
+        order = sorted(alive, key=lambda d: (-frac_fleet[d], d))
+        chosen = sorted(order[:m_new])
+        frac = np.asarray(frac_fleet[chosen], dtype=np.float64)
+        frac = (np.full(m_new, 1.0 / m_new) if frac.sum() <= 0
+                else frac / frac.sum())
+        cap = self.num_shards // m_new
+        assign = dist_fault.reassign_shards(self.num_shards, frac, cap=cap)
+        perm = np.argsort(assign, kind="stable")  # device-major slot order
+        repartitioned = self._owns_partitions and mon.observed
+        if repartitioned:
+            # capacity-aware re-partition: device chosen[i] holds `cap`
+            # slots, each sized frac[i]/cap of the edges (Lemma 2)
+            slot_frac = np.repeat(frac / cap, cap)
+            self.partitions = list(self.upper.partition(
+                self.graph, self.num_shards, fractions=slot_frac))
+        else:
+            self.partitions = [self.partitions[int(i)] for i in perm]
+        self._setup_blocks()
+        devs = np.asarray([self.fleet_devices[d] for d in chosen],
+                          dtype=object)
+        mesh = jax.sharding.Mesh(devs, (self.upper.axis,))
+        self.upper.remesh(mesh)
+        self.daemon.remesh(mesh, blocksets=self.blocksets)
+        before, self._mesh_device_ids = self._mesh_device_ids, list(chosen)
+        self._estimator = CapacityEstimator(self.num_shards)
+        return {
+            "killed": [int(d) for d in killed],
+            "stragglers": [int(d) for d in stragglers],
+            "devices_before": len(before),
+            "devices_after": m_new,
+            "device_ids": [int(d) for d in chosen],
+            "assignment": [int(a) for a in assign],
+            "repartitioned": bool(repartitioned),
+            "seconds": time.perf_counter() - t0,
+        }
+
     # -- Lemma-2 rebalancing ----------------------------------------------
     def rebalance(self, capacities=None) -> np.ndarray:
         """Capacity-aware re-assignment of blocks to shards (Lemma 2).
@@ -280,13 +443,24 @@ class Middleware:
                 raise ValueError(
                     f"capacities must have shape ({self.num_shards},), got "
                     f"{c.shape}")
-        elif not self._estimator.observed:
+        elif self._estimator.observed:
+            c = self._estimator.costs
+        elif self.monitor is not None and self.monitor.observed:
+            # Fused loops observe no per-shard busy times; the fleet
+            # monitor's per-device step times stand in.  Costs index the
+            # CURRENT mesh devices only — dead devices are never in the
+            # mesh, so their samples (cleared by mark_failed anyway)
+            # cannot mix into survivor capacities.
+            t = self.monitor.mean_times()[self._mesh_device_ids]
+            fill = np.nanmean(t) if np.any(np.isfinite(t)) else 1.0
+            t = np.where(np.isfinite(t), t, fill)
+            c = np.repeat(t, self.num_shards // len(self._mesh_device_ids))
+        else:
             raise ValueError(
                 "rebalance() has no observed per-shard busy times (the "
                 "fused drive loop times all shards as one program) — pass "
-                "capacities= explicitly, or run the host path first")
-        else:
-            c = self._estimator.costs
+                "capacities= explicitly, attach a reporting "
+                "FleetMonitor, or run the host path first")
         fractions = lemma2_fractions(c)
         self.partitions = list(self.upper.partition(
             self.graph, self.num_shards, fractions=fractions))
@@ -515,6 +689,9 @@ class _FusedLoopBase:
     def _advance(self, carry, aux, it, stacked):
         raise NotImplementedError
 
+    def _migrate_carry(self, carry):
+        raise NotImplementedError
+
     def run(self, max_iterations: int | None = None) -> Result:
         mw = self.mw
         prog = mw.program
@@ -537,6 +714,19 @@ class _FusedLoopBase:
         converged = False
 
         for it in range(1, max_it + 1):
+            # Elastic check between fused iterations: a device killed "at
+            # iteration k" dies before iteration k executes, and the run
+            # resumes from the carried (replicated) state — no checkpoint.
+            mig = mw._poll_faults(it) if mw.monitor is not None else None
+            if mig is not None:
+                t_mig = time.perf_counter()
+                carry = self._migrate_carry(carry)
+                aux_dev = mw.upper.migrate(aux_dev)
+                stacked = mw.daemon.stacked
+                self._step = self._build_step()  # new mesh → new program
+                blocks_total = int(sum(bs.num_blocks
+                                       for bs in mw.blocksets))
+                mig["seconds"] += time.perf_counter() - t_mig
             carry, done, n_active, blocks_run, extra = self._advance(
                 carry, aux_dev, jnp.int32(it), stacked)
             mw.stats.rounds_total += 1
@@ -546,6 +736,8 @@ class _FusedLoopBase:
                    "blocks_run": int(sum(shard_blocks)),
                    "shard_blocks_run": shard_blocks,
                    "active": int(n_active)}
+            if mig is not None:
+                rec["migration"] = mig
             rec.update(extra)
             per_iter.append(rec)
             if bool(done):
@@ -603,6 +795,11 @@ class DriveLoop(_FusedLoopBase):
 
     def _init_carry(self, state, active):
         return (state, active)
+
+    def _migrate_carry(self, carry):
+        # both carries are mesh-replicated — the survivors already hold
+        # full copies, so the move is a pure re-placement
+        return tuple(self.mw.upper.migrate(list(carry)))
 
     def _advance(self, carry, aux, it, stacked):
         state, active, done, n_active, blocks_run = self._step(
@@ -699,6 +896,39 @@ class AsyncDriveLoop(_FusedLoopBase):
         backlog = jax.device_put(np.zeros((m, mw.n), dtype=bool), shard)
         return (state, active, backlog, held_p, held_c,
                 jnp.float32(mw.model.theta0))
+
+    def _migrate_carry(self, carry):
+        """Survivor-mesh re-placement of the async carry.
+
+        State and frontier are replicated and move via
+        ``upper.migrate``.  The per-device scheduling state is
+        re-initialized for the new axis length m': held partials restart
+        at the monoid identity — the next merge then consumes every
+        device's fresh partials, i.e. one barriered step, so nothing a
+        device was holding is lost — and every survivor's new backlog is
+        the union of all old backlogs: a message suppressed during a
+        hold on ANY old device (dead ones included) is re-delivered
+        everywhere.  Re-delivery may recompute work but never loses an
+        update, which is what keeps the migrated fixed point exact.
+        ``theta`` carries over so the priority schedule resumes where it
+        was.
+        """
+        mw = self.mw
+        state, active, backlog, held_p, held_c, theta = carry
+        state, active = mw.upper.migrate((state, active))
+        merged_backlog = np.asarray(jax.device_get(backlog)).any(axis=0)
+        m = mw.daemon.m
+        shard = jax.sharding.NamedSharding(
+            mw.upper.mesh, jax.sharding.PartitionSpec(mw.upper.axis))
+        backlog = jax.device_put(
+            np.ascontiguousarray(
+                np.broadcast_to(merged_backlog, (m, mw.n))), shard)
+        held_p = jax.device_put(
+            np.full((m, mw.n, mw.k), mw.program.monoid.identity,
+                    np.float32), shard)
+        held_c = jax.device_put(np.zeros((m, mw.n), np.int32), shard)
+        return (state, active, backlog, held_p, held_c,
+                jnp.float32(float(theta)))
 
     def _advance(self, carry, aux, it, stacked):
         (state, active, backlog, held_p, held_c, theta, done, n_active,

@@ -190,6 +190,45 @@ class DevicePartialUpper(Protocol):
         ...
 
 
+@runtime_checkable
+class ElasticUpper(Protocol):
+    """Optional upper-system capability: survive a mid-run mesh change.
+
+    Elastic fault tolerance (DESIGN.md §4.4) is checkpoint-free: when a
+    device dies between fused iterations, the middleware re-plans the
+    mesh from the survivors and *migrates* the live run — stacked block
+    tensors, the replicated vertex state, and any on-mesh scheduling
+    carries — onto it with ``device_put``.  The upper system's half of
+    that contract is this pair:
+
+    * :meth:`remesh` rebuilds the collective-merge machinery for a new
+      (smaller) mesh: compiled merge fns are invalidated, the mesh-axis
+      length ``m`` is re-derived, and shard-count divisibility is
+      re-checked.  ``MeshUpperSystem`` implements it.
+    * :meth:`migrate` ``device_put``s a pytree of mesh-replicated arrays
+      (vertex state, aux, the frontier) onto the re-meshed device set.
+      Replication is what makes this checkpoint-free: every survivor
+      already holds a full copy, so no host snapshot is ever read back.
+
+    ``Middleware(monitor=...)`` requires this capability (together with
+    :class:`ShardCapableDaemon` + :class:`DevicePartialUpper` — i.e. a
+    fused drive loop) before it accepts a fleet monitor or a
+    ``dist.fault.FailureSchedule``.
+    """
+
+    mesh: object
+    axis: str
+
+    def remesh(self, mesh):
+        """Re-targets the merge collectives at ``mesh``; returns self."""
+        ...
+
+    def migrate(self, tree):
+        """``device_put`` a pytree of replicated arrays onto the current
+        (re-meshed) mesh, replicated again."""
+        ...
+
+
 # ``gather`` passed to a ComputationModel: calls every shard's daemon and
 # returns the per-shard (agg, cnt, read_ids) results for this iteration.
 GatherFn = Callable[[dict], Sequence[tuple]]

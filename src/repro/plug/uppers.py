@@ -157,6 +157,43 @@ class MeshUpperSystem(HostUpperSystem):
         sh = shd.sharding_for(arr.shape, axes, self.mesh, self._rules)
         return jax.device_put(arr, sh)
 
+    # -- elasticity (the ElasticUpper capability, DESIGN.md §4.4) ----------
+    def remesh(self, mesh):
+        """Re-targets the merge collectives at a survivor mesh.
+
+        Checkpoint-free migration's upper half: the compiled merge fns
+        (and the compressed wire, if any) were built for the old mesh
+        axis length and are invalidated; ``m`` is re-derived and the
+        stacked-shard divisibility re-checked.  The caller (the
+        middleware's ``migrate``) is responsible for re-binding the
+        daemon's block tensors onto the same mesh and for
+        :meth:`migrate`-ing the replicated run state.
+        """
+        if self.axis not in mesh.axis_names:
+            raise ValueError(
+                f"survivor mesh {mesh.axis_names} lacks the merge axis "
+                f"{self.axis!r}")
+        if self.num_shards % mesh.shape[self.axis]:
+            raise ValueError(
+                f"num_shards={self.num_shards} not divisible by the "
+                f"survivor mesh axis {self.axis}={mesh.shape[self.axis]}")
+        # validated above (before any mutation); rebind does the rest —
+        # one invalidation path for compiled fns, residuals, and m
+        self.mesh = mesh
+        self._auto_mesh = False
+        return self.bind(self.program, self.num_shards)
+
+    def migrate(self, tree):
+        """``device_put`` a pytree of mesh-replicated arrays onto the
+        current (re-meshed) mesh.  Every survivor already holds a full
+        replica, so this is the checkpoint-free state move — no host
+        snapshot is read back."""
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        rep = NamedSharding(self.mesh, P())
+        return jax.tree.map(lambda a: jax.device_put(a, rep), tree)
+
     def reset(self):
         # Per-run state: the error-feedback residual AND the wire
         # counters (regression: a second run() on the same instance

@@ -178,8 +178,10 @@ def test_reassign_shards_invariants(num_shards, num_hosts, num_dead, seed):
     # every shard reassigned, only to live hosts
     assert out.shape == (num_shards,)
     assert np.all(frac[out] > 0)
-    # no host beyond cap
+    # conservation: every shard lands exactly once — the assignment is
+    # total, nothing is dropped or duplicated — and no host exceeds cap
     counts = np.bincount(out, minlength=num_hosts)
+    assert counts.sum() == num_shards
     assert counts.max() <= cap
     # uncapped, the greedy assignment tracks the Lemma-2 entitlement: no
     # host exceeds its share by more than one shard (with a cap, overflow
@@ -194,6 +196,70 @@ def test_reassign_shards_infeasible_cap_raises():
         fault.reassign_shards(10, [0.5, 0.5], cap=4)
     with pytest.raises(ValueError):
         fault.reassign_shards(4, [0.0, 0.0])
+
+
+# --------------------------------------------------------------------------
+# detect_stragglers invariants
+# --------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(min_value=2, max_value=24),
+       seed=st.integers(min_value=0, max_value=1000))
+def test_detect_stragglers_permutation_equivariant(n, seed):
+    """Relabeling hosts relabels the flags and nothing else — the
+    detector has no positional bias (NaN slots for dead/unreporting
+    hosts included)."""
+    rng = np.random.default_rng(seed)
+    t = rng.uniform(0.5, 4.0, n)
+    t[rng.uniform(size=n) < 0.2] = np.nan  # dead hosts read as NaN
+    perm = rng.permutation(n)
+    np.testing.assert_array_equal(fault.detect_stragglers(t)[perm],
+                                  fault.detect_stragglers(t[perm]))
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(min_value=1, max_value=24),
+       scale_pow=st.integers(min_value=-3, max_value=3))
+def test_detect_stragglers_uniform_fleet_flags_nothing(n, scale_pow):
+    """A fleet at one speed has no stragglers, at any time scale, and
+    NaN (dead/unreporting) entries are never flagged either."""
+    t = np.full(n, 10.0 ** scale_pow)
+    assert not fault.detect_stragglers(t).any()
+    if n > 1:
+        t = t.copy()
+        t[0] = np.nan
+        assert not fault.detect_stragglers(t).any()
+
+
+# --------------------------------------------------------------------------
+# FailureSchedule invariants
+# --------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(min_value=1, max_value=10),
+       seed=st.integers(min_value=0, max_value=1000))
+def test_failure_schedule_fires_each_event_exactly_once(n, seed):
+    """However coarsely iterations are polled (a fused loop may converge
+    past several due events at once), every due kill fires exactly once
+    and never again."""
+    rng = np.random.default_rng(seed)
+    kills = [(int(rng.integers(1, 20)), int(d)) for d in range(n)]
+    sched = fault.FailureSchedule(kills=kills)
+    fired, it = [], 0
+    while it < 25:
+        it += int(rng.integers(1, 5))
+        fired.extend(sched.kills_at(it))
+    assert sorted(fired) == sorted(d for k, d in kills if k <= it)
+    assert sched.kills_at(it) == []  # all due events consumed
+    assert sched.exhausted == all(k <= it for k, _ in kills)
+    sched.reset()
+    assert sorted(sched.kills_at(100)) == sorted(d for _, d in kills)
+
+
+def test_failure_schedule_slow_reports_consumed_in_order():
+    sched = fault.FailureSchedule(slow=[(3, 1, 2.5), (1, 0, 1.5)])
+    assert sched.slow_reports(2) == [(0, 1.5)]
+    assert sched.slow_reports(2) == []
+    assert sched.slow_reports(3) == [(1, 2.5)]
+    assert sched.exhausted
 
 
 def test_monitor_reassign_skips_failed_host():
