@@ -56,9 +56,17 @@ def main():
 def _summarize(name, result):
     if name == "bench_accel":
         for alg, r in result.items():
-            # skip the non-algorithm entries (_meta, fault_recovery)
+            # skip the non-algorithm entries (_meta, fault_recovery, autotune)
             if isinstance(r, dict) and "speedup_vectorized" in r:
                 print(f"    {alg}: {r['speedup_vectorized']:.1f}x accel")
+                # direct indexing: a dropped kernel×model cell must
+                # KeyError loudly here, never silently skip the ratio
+                mx = r["sharded_matrix"]["per_iter_s"]
+                models = r["sharded_matrix"]["models"]
+                ratios = " ".join(
+                    f"{m}={mx[f'pallas/{m}'] / mx[f'reference/{m}']:.2f}x"
+                    for m in models)
+                print(f"    {alg}: pallas/reference per-iter {ratios}")
         fr = result.get("fault_recovery")
         if fr:
             print(f"    fault-recovery: {fr['devices_before']}→"

@@ -7,6 +7,12 @@
 # FailureSchedule / elastic_plan / reassign_shards properties — for quick
 # iteration on dist/fault.py and the middleware's migrate path.
 #
+# Fast kernel slice (scripts/verify.sh --kernels): the kernel-correctness
+# battery plus every pallas-parametrized daemon/fault row — the pre-commit
+# tier when touching kernels/, graph/compaction.py, or a daemon's pallas
+# path.  Selects by pytest keyword ("kernel or pallas"), which catches
+# tests/test_kernels.py wholesale and the kernel="pallas" matrix rows.
+#
 # Tier-2 (scripts/verify.sh --tier2): one production dry-run slice
 # (1 arch × 1 shape × both meshes, compiled on 512 fake devices) plus the
 # acceleration benchmark on the repro.plug API — including the
@@ -23,6 +29,11 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${1:-}" == "--fault" ]]; then
     shift
     exec python -m pytest -q -k "fault or elastic" "$@"
+fi
+
+if [[ "${1:-}" == "--kernels" ]]; then
+    shift
+    exec python -m pytest -q -k "kernel or pallas" "$@"
 fi
 
 if [[ "${1:-}" == "--tier2" ]]; then

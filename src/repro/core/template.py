@@ -39,8 +39,10 @@ import numpy as np
 
 # Host-side scatter-combine ufuncs per monoid (Monoid.scatter_at) —
 # module-level so per-edge/per-block callers pay one dict lookup, not a
-# dict construction.
-_SCATTER_UFUNCS = {"sum": np.add, "min": np.minimum, "max": np.maximum}
+# dict construction.  "or" operates on {0.0, 1.0} indicators, where
+# logical-or coincides exactly with max (see the OR monoid below).
+_SCATTER_UFUNCS = {"sum": np.add, "min": np.minimum, "max": np.maximum,
+                   "or": np.maximum}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +62,11 @@ class Monoid:
         if self.name == "min":
             return jax.ops.segment_min(msgs, seg_ids, num_segments)
         if self.name == "max":
+            return jax.ops.segment_max(msgs, seg_ids, num_segments)
+        if self.name == "or":
+            # logical-or over {0,1} indicator floats ≡ max — exact, and
+            # it keeps the reduction a selection (bit-identical under
+            # any merge order / duplication, like min/max)
             return jax.ops.segment_max(msgs, seg_ids, num_segments)
         raise ValueError(self.name)
 
@@ -83,8 +90,13 @@ class Monoid:
 SUM = Monoid("sum", 0.0, lambda a, b: a + b, idempotent=False)
 MIN = Monoid("min", float(np.finfo(np.float32).max), jnp.minimum, idempotent=True)
 MAX = Monoid("max", float(np.finfo(np.float32).min), jnp.maximum, idempotent=True)
+#: Logical OR over {0.0, 1.0} indicator messages (reachability /
+#: flooding style programs).  Implemented as max — exact on indicators —
+#: and idempotent, so it qualifies for sync skipping and bit-identity
+#: guarantees like min/max.
+OR = Monoid("or", 0.0, jnp.maximum, idempotent=True)
 
-MONOIDS = {m.name: m for m in (SUM, MIN, MAX)}
+MONOIDS = {m.name: m for m in (SUM, MIN, MAX, OR)}
 
 
 @dataclasses.dataclass(frozen=True)

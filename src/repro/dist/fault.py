@@ -209,15 +209,18 @@ class FleetMonitor:
     """
 
     def __init__(self, num_hosts: int, model_parallel: int = 1, *,
-                 window: int = 32, straggler_factor: float = 1.5):
+                 window: int = 32, straggler_factor: float = 1.5,
+                 drift_threshold: float = 0.5):
         if num_hosts < 1:
             raise ValueError("need at least one host")
         self.num_hosts = num_hosts
         self.model_parallel = model_parallel
         self.straggler_factor = straggler_factor
+        self.drift_threshold = drift_threshold
         self._times = [collections.deque(maxlen=window)
                        for _ in range(num_hosts)]
         self._failed = np.zeros(num_hosts, dtype=bool)
+        self._acked_fractions: np.ndarray | None = None
 
     # -- ingestion ---------------------------------------------------------
     def record(self, host: int, seconds: float) -> None:
@@ -275,6 +278,37 @@ class FleetMonitor:
         frac = np.zeros(self.num_hosts)
         frac[live] = balance.lemma2_fractions(costs[live])
         return frac
+
+    # -- capacity drift ----------------------------------------------------
+    def ack_capacity(self) -> np.ndarray:
+        """Snapshots the current Lemma-2 fractions as the acknowledged
+        baseline the fleet's placement was planned against.
+
+        Call after acting on the monitor's view (a migration, a
+        rebalance, or the initial placement).  ``capacity_drift`` then
+        measures how far the live view has moved away from this
+        baseline — which is what lets a *flagged* straggler that keeps
+        degrading trigger further migrations instead of being handled
+        exactly once.
+        """
+        self._acked_fractions = self.batch_fractions()
+        return self._acked_fractions
+
+    def capacity_drift(self) -> float:
+        """Max relative per-host change of the Lemma-2 fractions vs the
+        acknowledged baseline; 0.0 before any ``ack_capacity``."""
+        if self._acked_fractions is None:
+            return 0.0
+        cur = self.batch_fractions()
+        base = self._acked_fractions
+        denom = np.maximum(np.abs(base), 1e-12)
+        return float(np.max(np.abs(cur - base) / denom))
+
+    def drifted(self) -> bool:
+        """True when capacity has moved past ``drift_threshold`` (0.5 ≈
+        some host's entitlement halved or grew by half) since the last
+        acknowledged placement."""
+        return self.capacity_drift() > self.drift_threshold
 
     # -- failure path ------------------------------------------------------
     def remesh(self, *, devices_per_host: int) -> MeshPlan:

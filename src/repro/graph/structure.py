@@ -76,6 +76,32 @@ class Graph:
         np.cumsum(counts, out=indptr[1:])
         return indptr, order
 
+    def sorted_by_dst(self) -> "Graph":
+        """Returns an edge-permuted copy with edges grouped by destination.
+
+        The daemon-side merge is per-destination (MSGMerge), so grouping
+        edges by dst turns the segmented reduce into a sorted-segment
+        reduce — the layout the fused CSR aggregation kernel consumes
+        (graph/compaction.py).
+        """
+        order = np.argsort(self.dst, kind="stable")
+        return Graph(
+            num_vertices=self.num_vertices,
+            src=self.src[order],
+            dst=self.dst[order],
+            weights=None if self.weights is None else self.weights[order],
+        )
+
+    def csc(self) -> tuple[np.ndarray, np.ndarray]:
+        """(indptr, edge_order) grouping edges by dst (the transpose of
+        :meth:`csr`); src/weights follow order.  This is the in-edge view
+        the CSR tile compaction walks when it packs rows into tiles."""
+        order = np.argsort(self.dst, kind="stable")
+        counts = np.bincount(self.dst, minlength=self.num_vertices)
+        indptr = np.zeros(self.num_vertices + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        return indptr, order
+
 
 @dataclasses.dataclass(frozen=True)
 class EdgePartition:

@@ -54,13 +54,15 @@ def _kernel(vstate_ref, vaux_ref, lsrc_ref, ldst_ref, w_ref, emask_ref,
     if monoid.name == "sum":
         masked = msgs * emask[:, None]
         partial = dst_oh.T @ masked  # (VB, K) scatter-add on MXU
-    elif monoid.name in ("min", "max"):
-        # masked reduction per column: (VB, B) select matrix
+    elif monoid.name in ("min", "max", "or"):
+        # masked reduction per column: (VB, B) select matrix ("or" over
+        # {0,1} indicators is exactly max — see core.template.OR)
         sel = (dst_oh.T > 0.0) & (emask[None, :] > 0.0)  # (VB, B)
         cols = []
         for i in range(k):  # K is small & static
             mat = jnp.where(sel, msgs[:, i][None, :], monoid.identity)
-            red = jnp.min(mat, axis=1) if monoid.name == "min" else jnp.max(mat, axis=1)
+            red = (jnp.min(mat, axis=1) if monoid.name == "min"
+                   else jnp.max(mat, axis=1))
             cols.append(red)
         partial = jnp.stack(cols, axis=1)
     else:
@@ -69,7 +71,7 @@ def _kernel(vstate_ref, vaux_ref, lsrc_ref, ldst_ref, w_ref, emask_ref,
         # merge with the wrong operator
         raise ValueError(
             f"monoid {monoid.name!r} has no Pallas merge rule; known: "
-            "['max', 'min', 'sum']")
+            "['max', 'min', 'or', 'sum']")
     counts = (dst_oh.T @ emask[:, None])[:, 0]  # (VB,)
 
     partial_ref[0] = partial.astype(partial_ref.dtype)
@@ -114,3 +116,120 @@ def edge_block_pallas(vstate, vaux, lsrc, ldst, w, emask_f32, *,
         out_shape=out_shape,
         interpret=interpret,
     )(vstate, vaux, lsrc, ldst, w, emask_f32)
+
+
+# --------------------------------------------------------------------------
+# CSR tile kernel: the fused gather + Gen + segmented-Merge daemon program
+# over the dst-grouped tile layout of graph/compaction.py (DESIGN.md §3.1)
+# --------------------------------------------------------------------------
+def _csr_tile_kernel(vsrc_ref, vaux_ref, rowst_ref, lsrc_ref, seg_ref,
+                     w_ref, emask_ref, partial_ref, counts_ref, *,
+                     program: VertexProgram, gather: str):
+    """One grid step = one edge tile: gather the tile's compact src/row
+    blocks from VMEM, Gen per edge, Merge per row.
+
+    Because ``seg`` is a *sorted* tile-local row index and every
+    low-degree row lives entirely inside one tile (degree bucketing),
+    the per-row merge here is final for those rows; split hub rows are
+    finished by the cross-tile segmented combine in ops.csr_aggregate.
+    The merge itself is the MXU/VPU form: one-hot-transpose matmul for
+    sum, a masked per-column reduction for the selection monoids
+    (min/max/or) — identical math to the reference XLA twin.
+    """
+    monoid = program.monoid
+    k = program.state_width
+    vsrc = vsrc_ref[0].astype(jnp.float32)    # (ST, K)
+    vaux = vaux_ref[0].astype(jnp.float32)    # (ST, A)
+    rowst = rowst_ref[0].astype(jnp.float32)  # (RT, K)
+    lsrc = lsrc_ref[0]                        # (ET,)
+    seg = seg_ref[0]                          # (ET,)
+    w = w_ref[0].astype(jnp.float32)          # (ET, 1)
+    emask = emask_ref[0].astype(jnp.float32)  # (ET,)
+
+    et = lsrc.shape[0]
+    st = vsrc.shape[0]
+    rt = rowst.shape[0]
+    rcol = jax.lax.broadcasted_iota(jnp.int32, (et, rt), 1)
+    row_oh = (seg[:, None] == rcol).astype(jnp.float32)  # (ET, RT)
+    if gather == "onehot":
+        scol = jax.lax.broadcasted_iota(jnp.int32, (et, st), 1)
+        src_oh = (lsrc[:, None] == scol).astype(jnp.float32)
+        s = src_oh @ vsrc   # MXU gathers
+        sa = src_oh @ vaux
+        d = row_oh @ rowst
+    else:  # "take": vector gathers from the VMEM-resident blocks
+        s = vsrc[lsrc]
+        sa = vaux[lsrc]
+        d = rowst[seg]
+
+    msgs = program.msg_gen(s, d, w, sa)  # (ET, K)
+
+    if monoid.name == "sum":
+        masked = msgs * emask[:, None]
+        partial = row_oh.T @ masked  # (RT, K) scatter-add on MXU
+    elif monoid.name in ("min", "max", "or"):
+        sel = (row_oh.T > 0.0) & (emask[None, :] > 0.0)  # (RT, ET)
+        cols = []
+        for i in range(k):
+            mat = jnp.where(sel, msgs[:, i][None, :], monoid.identity)
+            red = (jnp.min(mat, axis=1) if monoid.name == "min"
+                   else jnp.max(mat, axis=1))
+            cols.append(red)
+        partial = jnp.stack(cols, axis=1)
+    else:
+        raise ValueError(
+            f"monoid {monoid.name!r} has no Pallas merge rule; known: "
+            "['max', 'min', 'or', 'sum']")
+    counts = (row_oh.T @ emask[:, None])[:, 0]  # (RT,)
+
+    partial_ref[0] = partial.astype(partial_ref.dtype)
+    counts_ref[0] = counts.astype(jnp.int32)
+
+
+def csr_tile_pallas(vsrc, vaux, rowst, lsrc, seg, w, emask_f32, *,
+                    program: VertexProgram, gather: str = "take",
+                    interpret: bool = True):
+    """Runs the fused CSR tile program over all tiles.
+
+    Args (pre-gathered compact blocks — see ops.csr_aggregate):
+      vsrc (T, ST, K) f32, vaux (T, ST, A) f32 — per-tile src blocks;
+      rowst (T, RT, K) f32 — per-tile row (dst) state blocks;
+      lsrc/seg (T, ET) i32, w (T, ET, 1) f32, emask_f32 (T, ET) f32.
+    Returns: partial (T, RT, K) f32, counts (T, RT) i32 — per-tile row
+    partials; split hub rows still need the cross-tile combine.
+
+    VMEM per grid step (f32): ST·(K+A) + RT·K + 3·ET + ET·RT (row
+    one-hot) + ET·K — with ET=512, RT≤512, K≤8 this is ≲1.2 MiB, well
+    inside a TPU core's ~16 MiB with double buffering to spare.
+    """
+    t, st, k = vsrc.shape
+    a = vaux.shape[2]
+    rt = rowst.shape[1]
+    et = lsrc.shape[1]
+    kern = functools.partial(_csr_tile_kernel, program=program,
+                             gather=gather)
+    out_shape = [
+        jax.ShapeDtypeStruct((t, rt, k), jnp.float32),
+        jax.ShapeDtypeStruct((t, rt), jnp.int32),
+    ]
+    in_specs = [
+        pl.BlockSpec((1, st, k), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, st, a), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, rt, k), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, et), lambda i: (i, 0)),
+        pl.BlockSpec((1, et), lambda i: (i, 0)),
+        pl.BlockSpec((1, et, 1), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, et), lambda i: (i, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, rt, k), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, rt), lambda i: (i, 0)),
+    ]
+    return pl.pallas_call(
+        kern,
+        grid=(t,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(vsrc, vaux, rowst, lsrc, seg, w, emask_f32)

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.core.template import VertexProgram
 from repro.kernels import ref
-from repro.kernels.edge_block import edge_block_pallas
+from repro.kernels.edge_block import csr_tile_pallas, edge_block_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ssd_scan import ssd_chunk_pallas
 
@@ -42,6 +42,135 @@ def edge_block_aggregate(state, aux, vids, lsrc, ldst, w, emask, *,
     return edge_block_pallas(vstate, vaux, lsrc, ldst, w.astype(jnp.float32),
                              emf, program=program,
                              interpret=_default_interpret())
+
+
+# --------------------------------------------------------------------------
+# CSR tile aggregation (the fused daemon program, DESIGN.md §3.1)
+# --------------------------------------------------------------------------
+def _csr_tiles_xla(vsrc, vaux, rowst, lsrc, seg, w, emask, *,
+                   program: VertexProgram, merge: str, gather: str):
+    """XLA twin of the Pallas CSR tile kernel: identical per-tile math,
+    batched over the tile axis — the lowering the autotuner selects on
+    backends where interpret-mode Pallas would pay per-op dispatch."""
+    monoid = program.monoid
+    k = program.state_width
+    t, st, _ = vsrc.shape
+    rt = rowst.shape[1]
+    et = lsrc.shape[1]
+    if gather == "onehot":
+        soh = (lsrc[..., None]
+               == jnp.arange(st, dtype=lsrc.dtype)[None, None, :]
+               ).astype(jnp.float32)
+        roh_f = (seg[..., None]
+                 == jnp.arange(rt, dtype=seg.dtype)[None, None, :]
+                 ).astype(jnp.float32)
+        s = jnp.einsum("tes,tsk->tek", soh, vsrc)
+        sa = jnp.einsum("tes,tsa->tea", soh, vaux)
+        d = jnp.einsum("ter,trk->tek", roh_f, rowst)
+    else:
+        s = jnp.take_along_axis(vsrc, lsrc[..., None], axis=1)
+        sa = jnp.take_along_axis(vaux, lsrc[..., None], axis=1)
+        d = jnp.take_along_axis(rowst, seg[..., None], axis=1)
+    msgs = program.msg_gen(
+        s.reshape(t * et, k), d.reshape(t * et, k),
+        w.reshape(t * et, 1), sa.reshape(t * et, -1)).reshape(t, et, k)
+    msgs = jnp.where(emask[..., None], msgs, monoid.identity)
+    if merge == "sorted":
+        # seg is sorted tile-local — a single flat sorted-segment reduce
+        segg = (seg + jnp.arange(t, dtype=seg.dtype)[:, None] * rt
+                ).reshape(-1)
+        partial = monoid.segment_reduce(msgs.reshape(t * et, k), segg,
+                                        t * rt)
+        counts = jax.ops.segment_sum(
+            emask.reshape(-1).astype(jnp.int32), segg, t * rt)
+        partial = jnp.where((counts > 0)[:, None], partial,
+                            monoid.identity)
+        return partial.reshape(t, rt, k), counts.reshape(t, rt)
+    # merge == "onehot": the MXU form, kept bit-identical to the kernel
+    roh = (seg[..., None] == jnp.arange(rt, dtype=seg.dtype)[None, None, :])
+    live = roh & emask[..., None]  # (T, ET, RT)
+    if monoid.name == "sum":
+        partial = jnp.einsum("ter,tek->trk", live.astype(jnp.float32),
+                             msgs)
+    elif monoid.name in ("min", "max", "or"):
+        sel = jnp.swapaxes(live, 1, 2)  # (T, RT, ET)
+        cols = []
+        for i in range(k):  # K is small & static
+            mat = jnp.where(sel, msgs[..., i][:, None, :], monoid.identity)
+            red = (jnp.min(mat, axis=2) if monoid.name == "min"
+                   else jnp.max(mat, axis=2))
+            cols.append(red)
+        partial = jnp.stack(cols, axis=2)
+    else:
+        raise ValueError(
+            f"monoid {monoid.name!r} has no CSR merge rule; known: "
+            "['max', 'min', 'or', 'sum']")
+    counts = live.sum(axis=1).astype(jnp.int32)
+    return partial, counts
+
+
+def csr_aggregate(state, aux, csr: dict, *, program: VertexProgram,
+                  num_vertices: int, config, interpret: bool | None = None):
+    """Fused gather + Gen + segmented Merge over CSR tiles → (N, K) agg.
+
+    Args:
+      state (N, K) f32, aux (N, A) f32 — the shard vertex table.
+      csr: dict of per-tile arrays with leading tile axis T (the
+        ``CSRTileSet.arrays()`` layout): rows (T, RT), seg/lsrc/gsrc/gdst
+        (T, ET), svids (T, ST), w (T, ET, 1), emask (T, ET) bool.
+        ``emask`` may already carry per-edge frontier filtering.
+      config: a ``kernels.autotune.CSRConfig`` (or any object with
+        edge_tile/lowering/merge/gather attributes).  ``merge="flat"``
+        skips per-tile partials entirely: one sorted-segment reduce by
+        global dst straight to (N, K) — XLA only; the tiled variants run
+        the tile body (Pallas kernel or its XLA twin) and finish split
+        hub rows with a cross-tile segmented combine.
+    Returns:
+      agg (N, K) f32 — merged messages; vertices with no message read
+      the monoid identity.  cnt (N,) i32 — messages per vertex.
+    Traceable (no jit of its own), so the same dispatch serves the
+    per-shard daemon and the ``shard_map`` body of the sharded daemon.
+    """
+    monoid = program.monoid
+    k = program.state_width
+    n = num_vertices
+    emask = csr["emask"]
+    if aux.shape[1] == 0:  # zero-width aux: keep gathers/BlockSpecs ≥ 1 wide
+        aux = jnp.zeros((state.shape[0], 1), state.dtype)
+    w = csr["w"].astype(jnp.float32)
+    if config.merge == "flat":
+        gsrc = csr["gsrc"].reshape(-1)
+        gdst = csr["gdst"].reshape(-1)
+        emf = emask.reshape(-1)
+        msgs = program.msg_gen(state[gsrc], state[gdst],
+                               w.reshape(-1, 1), aux[gsrc])
+        msgs = jnp.where(emf[:, None], msgs, monoid.identity)
+        # dead/padded slots carry dst 0: they merge an identity into
+        # vertex 0 — a no-op, same convention as the block layout
+        agg = monoid.segment_reduce(msgs, gdst, n)
+        cnt = jax.ops.segment_sum(emf.astype(jnp.int32), gdst, n)
+    else:
+        vsrc = state[csr["svids"]]   # (T, ST, K) compact src blocks
+        vaux = aux[csr["svids"]]
+        rowst = state[csr["rows"]]   # (T, RT, K) compact row blocks
+        if config.lowering == "pallas":
+            partial, counts = csr_tile_pallas(
+                vsrc, vaux, rowst, csr["lsrc"], csr["seg"], w,
+                emask.astype(jnp.float32), program=program,
+                gather=config.gather,
+                interpret=(_default_interpret() if interpret is None
+                           else interpret))
+        else:
+            partial, counts = _csr_tiles_xla(
+                vsrc, vaux, rowst, csr["lsrc"], csr["seg"], w, emask,
+                program=program, merge=config.merge, gather=config.gather)
+        # cross-tile combine: finishes split hub rows and folds every
+        # tile's row partials into the shard aggregate
+        rows = csr["rows"].reshape(-1)
+        agg = monoid.segment_reduce(partial.reshape(-1, k), rows, n)
+        cnt = jax.ops.segment_sum(counts.reshape(-1), rows, n)
+    agg = jnp.where((cnt > 0)[:, None], agg, monoid.identity)
+    return agg, cnt
 
 
 # --------------------------------------------------------------------------

@@ -7,8 +7,12 @@ middleware cannot tell them apart:
 * ``VectorizedDaemon``  — all selected blocks stacked into one fused jit
   call (gather + Gen + segmented Merge + combine), active set padded to a
   power of two to bound recompiles.  ``kernel="reference"`` lowers pure
-  jnp; ``kernel="pallas"`` routes the block program through the Pallas
-  edge-block kernel (interpret mode off-TPU).
+  jnp; ``kernel="pallas"`` runs the fused CSR tile program instead
+  (graph/compaction.py + kernels.ops.csr_aggregate): the blockset is
+  compacted once into dst-grouped tiles, the autotuner picks the
+  lowering/merge/gather point (kernels/autotune.py), and block-granularity
+  frontier selection maps onto the fixed tile layout as a per-edge mask —
+  no padded-active-set buckets, one compiled shape for the whole run.
 * ``BlockedDaemon``     — the paper's 5-step flow collapsed to 3:
   sequential Download → Compute → Upload per block.
 * ``PipelinedDaemon``   — the 3-thread pipeline shuffle with rotating
@@ -124,6 +128,12 @@ def make_combine_fn(program: VertexProgram, n: int):
         flat_ids = vids.reshape(-1)
         agg = monoid.segment_reduce(partial.reshape(nbvb, k), flat_ids, n)
         cnt = jax.ops.segment_sum(counts.reshape(-1), flat_ids, n)
+        # message-free vertices read the monoid identity, not jax's ±inf
+        # segment fill — the contract of kernels/ref.py and the CSR
+        # kernel, and what the host streaming daemons (identity-
+        # initialized aggregates) already produce.  Consumers mask via
+        # has_msg = cnt > 0 either way.
+        agg = jnp.where((cnt > 0)[:, None], agg, monoid.identity)
         return agg, cnt
 
     return combine
@@ -161,27 +171,96 @@ def gather_blocks(bs: BlockSet, sel: np.ndarray):
 # --------------------------------------------------------------------------
 # daemons
 # --------------------------------------------------------------------------
+def _live_edges(bs: BlockSet):
+    """Extracts the real (unpadded) edges of a BlockSet as flat arrays."""
+    live = bs.emask.reshape(-1)
+    return (bs.gsrc.reshape(-1)[live], bs.gdst.reshape(-1)[live],
+            bs.weights.reshape(-1)[live])
+
+
 class VectorizedDaemon:
     """All active blocks in one fused jit call — the optimized path."""
 
     name = "vectorized"
 
-    def __init__(self, kernel: str = "reference"):
+    def __init__(self, kernel: str = "reference", csr_config=None):
         if kernel not in KERNELS:
             raise ValueError(f"kernel must be one of {KERNELS}, got {kernel!r}")
         self.kernel = kernel
+        self.csr_config = csr_config  # user override; None → autotune
         self.program = None
         self.block_fn = None
         self._combine_fn = None
+        self._csr_config = None  # resolved per binding
+        self._csr_cache: dict = {}  # id(blockset) -> compiled CSR entry
 
     def bind(self, program: VertexProgram, num_vertices: int):
         self.program = program
         self.n = num_vertices
         self.block_fn = make_block_fn(program, kernel=self.kernel)
         self._combine_fn = make_combine_fn(program, num_vertices)
+        # a rebind invalidates the compacted tiles and the tuned config
+        # (the monoid may have changed); an explicit csr_config survives
+        self._csr_config = None
+        self._csr_cache = {}
         return self
 
+    def _resolve_csr_config(self, src, dst, w):
+        """Autotunes once per binding (deferred to first run so unknown
+        monoids raise at run time, matching the block-path contract);
+        shards bound after the first reuse the chosen config."""
+        if self._csr_config is None:
+            from repro.kernels import autotune as at
+
+            self._csr_config = (
+                self.csr_config if self.csr_config is not None
+                else at.autotune_csr(src, dst, w, self.n, self.program))
+        return self._csr_config
+
+    def _csr_entry(self, blockset: BlockSet):
+        key = id(blockset)
+        entry = self._csr_cache.get(key)
+        if entry is not None:
+            return entry
+        from repro.graph.compaction import tiles_from_blockset
+        from repro.kernels import ops as kops
+
+        cfg = self._resolve_csr_config(*_live_edges(blockset))
+        ts = tiles_from_blockset(blockset, self.n, edge_tile=cfg.edge_tile,
+                                 hub_threshold=cfg.hub_threshold)
+        program, n = self.program, self.n
+
+        @jax.jit
+        def run(state, aux, blk_mask, csr, eblock):
+            # block-granularity frontier selection as a per-edge mask:
+            # padded slots carry eblock == -1 (wraps to the last block)
+            # but their base emask is already False
+            em = csr["emask"] & blk_mask[eblock]
+            return kops.csr_aggregate(state, aux, dict(csr, emask=em),
+                                      program=program, num_vertices=n,
+                                      config=cfg)
+
+        entry = {
+            "csr": {k: jnp.asarray(v) for k, v in ts.arrays().items()},
+            "eblock": jnp.asarray(ts.eblock),
+            "num_blocks": blockset.num_blocks,
+            "run": run,
+        }
+        self._csr_cache[key] = entry
+        return entry
+
+    def _run_blocks_csr(self, state, aux, blockset, sel):
+        entry = self._csr_entry(blockset)
+        blk_mask = np.zeros(entry["num_blocks"], bool)
+        blk_mask[sel] = True
+        agg, cnt = entry["run"](jnp.asarray(state), jnp.asarray(aux),
+                                jnp.asarray(blk_mask), entry["csr"],
+                                entry["eblock"])
+        return np.asarray(agg), np.asarray(cnt)
+
     def run_blocks(self, state, aux, blockset, sel, record):
+        if self.kernel == "pallas":
+            return self._run_blocks_csr(state, aux, blockset, sel)
         sel_p = pad_pow2(sel)
         arrs = gather_blocks(blockset, sel_p)
         partial, counts = self.block_fn(jnp.asarray(state), jnp.asarray(aux),
@@ -208,18 +287,25 @@ class ShardedDaemon(VectorizedDaemon):
     device partials (``upper="host"``) the same instance simply runs the
     classic per-shard path.
 
-    ``kernel="pallas"`` routes the block math inside the ``shard_map``
-    body through the Pallas edge-block kernel (``repro.kernels``,
-    interpret mode off-TPU) via the same :data:`BLOCK_PARTIALS` dispatch
-    the per-shard daemons use — sharded and vectorized stay bit-identical
-    per kernel for idempotent monoids.
+    ``kernel="pallas"`` runs the fused CSR tile program inside the
+    ``shard_map`` body instead of the block program: ``bind_shards``
+    compacts every shard's blockset into dst-grouped tiles
+    (graph/compaction.py), autotunes the kernel config once on the
+    largest shard, pads the tile sets to a common envelope and stacks
+    them over the mesh axis next to the block tensors.  Frontier
+    skipping becomes a per-edge mask (``emask & active[gsrc]``) —
+    trajectory-identical to block-granularity skipping for the
+    idempotent monoids that drive frontiers — and ``blocks_run`` counts
+    active *tiles*.  The same ``kernels.ops.csr_aggregate`` dispatch
+    serves the per-shard ``VectorizedDaemon``, so sharded and
+    vectorized stay bit-identical per kernel for idempotent monoids.
     """
 
     name = "sharded"
 
     def __init__(self, kernel: str = "reference", mesh=None,
-                 axis: str = "shard"):
-        super().__init__(kernel)
+                 axis: str = "shard", csr_config=None):
+        super().__init__(kernel, csr_config=csr_config)
         self.mesh = mesh
         self._auto_mesh = mesh is None
         self.axis = axis
@@ -300,8 +386,35 @@ class ShardedDaemon(VectorizedDaemon):
             "emask": place(stack("emask", fill=False)),
             "gsrc": place(stack("gsrc")),
         }
+        if self.kernel == "pallas":
+            self._stacked["csr"] = self._stack_csr_tiles(blocksets, place)
         self._partials_fns = {}
         return self
+
+    def _stack_csr_tiles(self, blocksets, place):
+        """Compacts every shard's blockset into CSR tiles, pads them to a
+        common (nt, RT, ST) envelope and places the stacked arrays.
+
+        The kernel config is autotuned once, on the largest shard (the
+        shard that dominates the step), and pinned on the daemon — a
+        mid-run ``remesh`` re-stacks with the already-chosen config, so
+        checkpoint-free migration never pays a re-sweep.
+        """
+        from repro.graph.compaction import pad_tileset, tiles_from_blockset
+
+        big = max(blocksets, key=lambda bs: int(bs.emask.sum()))
+        cfg = self._resolve_csr_config(*_live_edges(big))
+        tiles = [tiles_from_blockset(bs, self.n, edge_tile=cfg.edge_tile,
+                                     hub_threshold=cfg.hub_threshold)
+                 for bs in blocksets]
+        nt = max(t.num_tiles for t in tiles)
+        rt = max(t.row_tile for t in tiles)
+        st = max(t.src_tile for t in tiles)
+        tiles = [pad_tileset(t, num_tiles=nt, row_tile=rt, src_tile=st)
+                 for t in tiles]
+        keys = tiles[0].arrays().keys()
+        return {k: place(np.stack([t.arrays()[k] for t in tiles]))
+                for k in keys}
 
     def remesh(self, mesh, *, blocksets=None):
         """Re-stacks the bound block tensors over a (smaller) survivor
@@ -365,6 +478,11 @@ class ShardedDaemon(VectorizedDaemon):
             flat_ids = vids.reshape(-1)
             agg = monoid.segment_reduce(partial.reshape(-1, k), flat_ids, n)
             cnt = jax.ops.segment_sum(counts.reshape(-1), flat_ids, n)
+            # identity (not ±inf fill) at message-free vertices — the
+            # same partials contract as the CSR kernel and the host
+            # daemons, which keeps run_all_shards bit-identical across
+            # kernels slot for slot
+            agg = jnp.where((cnt > 0)[:, None], agg, monoid.identity)
             return (agg[None], cnt[None],
                     blk_active.sum(axis=1).astype(jnp.int32))
 
@@ -374,6 +492,66 @@ class ShardedDaemon(VectorizedDaemon):
         fn = shard_map(
             body, mesh=self.mesh,
             in_specs=(rep, rep, act_spec, spec, spec, spec, spec, spec, spec),
+            out_specs=(spec, spec, spec), check_rep=False)
+        self._partials_fns[key] = fn
+        return fn
+
+    def _csr_partials_fn(self, use_frontier: bool, per_device: bool = False):
+        """The ``shard_map`` body for ``kernel="pallas"``: the fused CSR
+        tile program + per-device combine, same output contract as
+        :meth:`_partials_fn` (``blocks_run`` counts active tiles)."""
+        key = ("csr", use_frontier, per_device)
+        try:
+            return self._partials_fns[key]
+        except KeyError:
+            pass
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.kernels import ops as kops
+
+        program = self.program
+        n = self.n
+        cfg = self._csr_config
+
+        def body(state, aux, active, rows, seg, lsrc, svids, w, emask,
+                 gsrc, gdst):
+            # local slices (S/m, nt, …); state/aux replicated; active is
+            # replicated (N,) — or this device's (1, N) backlog row when
+            # the fused async loop drives per-device frontiers
+            s_l, nt, et = lsrc.shape
+            if use_frontier:
+                # per-edge frontier filtering — trajectory-identical to
+                # the block path's block-granularity skipping for the
+                # idempotent monoids that drive frontiers
+                act = active[0] if per_device else active
+                em = emask & act[gsrc]
+            else:
+                em = emask
+            tiles_run = jnp.any(em, axis=2).sum(axis=1).astype(jnp.int32)
+            csr = {
+                "rows": rows.reshape(s_l * nt, -1),
+                "seg": seg.reshape(s_l * nt, et),
+                "lsrc": lsrc.reshape(s_l * nt, et),
+                "svids": svids.reshape(s_l * nt, -1),
+                "w": w.reshape(s_l * nt, et, 1),
+                "emask": em.reshape(s_l * nt, et),
+                "gsrc": gsrc.reshape(s_l * nt, et),
+                "gdst": gdst.reshape(s_l * nt, et),
+            }
+            # per-device partial combine happens inside csr_aggregate:
+            # every tile's row partials (and the flat variant's direct
+            # segment reduce) land in one (N, K) aggregate per device
+            agg, cnt = kops.csr_aggregate(state, aux, csr, program=program,
+                                          num_vertices=n, config=cfg)
+            return agg[None], cnt[None], tiles_run
+
+        spec = P(self.axis)
+        rep = P()
+        act_spec = spec if per_device else rep
+        fn = shard_map(
+            body, mesh=self.mesh,
+            in_specs=(rep, rep, act_spec) + (spec,) * 8,
             out_specs=(spec, spec, spec), check_rep=False)
         self._partials_fns[key] = fn
         return fn
@@ -400,9 +578,15 @@ class ShardedDaemon(VectorizedDaemon):
             raise RuntimeError(
                 "ShardedDaemon.run_all_shards called before bind_shards")
         per_device = active is not None and getattr(active, "ndim", 1) == 2
-        fn = self._partials_fn(active is not None, per_device)
+        use_frontier = active is not None
         if active is None:
             active = jnp.zeros((1,), jnp.bool_)  # placeholder, unread
+        if self.kernel == "pallas" and "csr" in st:
+            fn = self._csr_partials_fn(use_frontier, per_device)
+            c = st["csr"]
+            return fn(state, aux, active, c["rows"], c["seg"], c["lsrc"],
+                      c["svids"], c["w"], c["emask"], c["gsrc"], c["gdst"])
+        fn = self._partials_fn(use_frontier, per_device)
         return fn(state, aux, active, st["vids"], st["lsrc"], st["ldst"],
                   st["weights"], st["emask"], st["gsrc"])
 

@@ -228,6 +228,10 @@ class Middleware:
                     f"fused mesh has {m0} devices — one monitor slot per "
                     "mesh device")
             self._mesh_device_ids = list(range(m0))
+            # the initial placement acknowledges whatever the monitor
+            # already knows; straggler migrations then key off drift
+            # relative to this baseline
+            self.monitor.ack_capacity()
 
     # -- setup ------------------------------------------------------------
     def _resolve_block_size(self) -> int:
@@ -295,10 +299,14 @@ class Middleware:
         """The between-iteration elastic check of the fused drive loops.
 
         Feeds the failure schedule's due events into the monitor
-        (injected step-time reports, then kills), and migrates when
-        either a dead device sits in the active mesh or a straggler is
-        flagged for the first time.  Returns the migration record for
-        the iteration log, or None when the fleet is healthy.
+        (injected step-time reports, then kills), and migrates when a
+        dead device sits in the active mesh, a straggler is flagged for
+        the first time, or an already-handled straggler's capacity has
+        kept drifting past the monitor's threshold since the placement
+        last acknowledged it (``FleetMonitor.ack_capacity``) — straggler
+        handling is continuous, not once-per-device.  Returns the
+        migration record for the iteration log, or None when the fleet
+        is healthy.
         """
         mon = self.monitor
         if mon is None:
@@ -318,12 +326,17 @@ class Middleware:
         if self._owns_partitions:
             # like the failure branch: only stragglers that actually
             # carry shards (sit in the active mesh) warrant a migration
-            fresh = [int(d) for d in np.nonzero(mon.stragglers())[0]
-                     if int(d) in self._mesh_device_ids
-                     and int(d) not in self._handled_stragglers]
-            if fresh:
+            flagged = [int(d) for d in np.nonzero(mon.stragglers())[0]
+                       if int(d) in self._mesh_device_ids]
+            fresh = [d for d in flagged
+                     if d not in self._handled_stragglers]
+            # a straggler seen before still warrants a migration when
+            # its capacity kept degrading after the placement that
+            # absorbed it — drift vs the acked baseline, not a
+            # fire-once flag, is what tracks that
+            if fresh or (flagged and mon.drifted()):
                 self._handled_stragglers.update(fresh)
-                return self.migrate(stragglers=fresh)
+                return self.migrate(stragglers=fresh or flagged)
         return None
 
     def migrate(self, *, killed=(), stragglers=()) -> dict:
@@ -399,6 +412,9 @@ class Middleware:
         self.daemon.remesh(mesh, blocksets=self.blocksets)
         before, self._mesh_device_ids = self._mesh_device_ids, list(chosen)
         self._estimator = CapacityEstimator(self.num_shards)
+        # the new placement absorbs the fleet's current capacity view;
+        # further straggler migrations require further drift
+        mon.ack_capacity()
         return {
             "killed": [int(d) for d in killed],
             "stragglers": [int(d) for d in stragglers],

@@ -1,0 +1,137 @@
+"""Golden test pinning the BENCH_plug.json tier-2 baseline schema.
+
+The acceleration summary (benchmarks/run.py) indexes the kernel×model
+matrix directly: if a refactor of bench_accel drops a cell, the ratio
+computation must KeyError loudly rather than silently shrink the
+summary.  This file pins both sides of that contract:
+
+* the recorded artifact carries EVERY kernel×model cell, the
+  pallas/reference ratios, and the autotune sweep tables that chose the
+  CSR configs (the full per-config table, not just the winner);
+* ``_summarize`` raises on a missing cell and mentions the pallas path.
+
+Timing VALUES are deliberately not pinned (the perf acceptance lives in
+the bench itself); only the shape of what gets recorded is.
+"""
+from __future__ import annotations
+
+import copy
+import itertools
+import json
+import pathlib
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+BASELINE = REPO / "results" / "benchmarks" / "BENCH_plug.json"
+
+ALGS = ("pagerank", "sssp_bf", "label_prop")
+KERNELS = ("reference", "pallas")
+MODELS = ("bsp", "async")
+CELLS = tuple(f"{k}/{m}" for k, m in itertools.product(KERNELS, MODELS))
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    if not BASELINE.exists():
+        pytest.skip("tier-2 baseline not recorded "
+                    "(run scripts/verify.sh --tier2)")
+    with open(BASELINE) as f:
+        return json.load(f)
+
+
+def _summarize():
+    sys.path.insert(0, str(REPO))
+    try:
+        from benchmarks.run import _summarize as fn
+    finally:
+        sys.path.pop(0)
+    return fn
+
+
+# -- artifact schema ---------------------------------------------------------
+@pytest.mark.parametrize("alg", ALGS)
+def test_baseline_records_every_kernel_model_cell(baseline, alg):
+    mx = baseline[alg]["sharded_matrix"]
+    assert mx["kernels"] == list(KERNELS)
+    assert mx["models"] == list(MODELS)
+    assert set(mx["per_iter_s"]) == set(CELLS)
+    assert all(v > 0 for v in mx["per_iter_s"].values())
+
+
+@pytest.mark.parametrize("alg", ALGS)
+def test_baseline_ratios_consistent_with_cells(baseline, alg):
+    """pallas_vs_reference is derived data; it must agree with the cells
+    it claims to summarize (a hand-edited artifact fails here)."""
+    mx = baseline[alg]["sharded_matrix"]
+    assert set(mx["pallas_vs_reference"]) == set(MODELS)
+    for m in MODELS:
+        want = mx["per_iter_s"][f"pallas/{m}"] / mx["per_iter_s"][f"reference/{m}"]
+        assert mx["pallas_vs_reference"][m] == pytest.approx(want, rel=1e-9)
+
+
+def test_baseline_records_autotune_sweep_tables(baseline):
+    """Every pallas cell was produced by an autotuned CSR config; the
+    artifact must carry the full sweep table per signature so the choice
+    is auditable, with the chosen label the table's argmin."""
+    from repro.kernels.autotune import DEFAULT_SPACE
+
+    at = baseline["autotune"]
+    assert at["sweeps"] >= 1 and at["entries"]
+    labels = {c.label for c in DEFAULT_SPACE}
+    for entry in at["entries"]:
+        assert entry["monoid"] in {"sum", "min", "max", "or"}
+        assert set(entry["table"]) == labels
+        assert all(t > 0 for t in entry["table"].values())
+        assert entry["chosen"] in entry["table"]
+        assert entry["table"][entry["chosen"]] == min(entry["table"].values())
+
+
+def test_baseline_meta_and_fault_recovery_rows(baseline):
+    meta = baseline["_meta"]
+    assert meta["num_devices"] == 8 and meta["quick"] is True
+    fr = baseline["fault_recovery"]
+    assert fr["state_bit_identical"] is True
+    assert fr["devices_after"] < fr["devices_before"]
+
+
+# -- summary contract --------------------------------------------------------
+def _fake_result():
+    cell = {c: 1e-3 * (i + 1) for i, c in enumerate(CELLS)}
+    return {
+        alg: {
+            "naive": 1.0, "blocked": 0.5, "vectorized": 0.1,
+            "speedup_vectorized": 10.0,
+            "sharded_matrix": {"kernels": list(KERNELS),
+                               "models": list(MODELS),
+                               "per_iter_s": dict(cell),
+                               "pallas_vs_reference": {m: 1.0
+                                                       for m in MODELS}},
+        }
+        for alg in ALGS
+    }
+
+
+def test_summarize_mentions_pallas_ratio_per_algorithm(capsys):
+    _summarize()("bench_accel", _fake_result())
+    out = capsys.readouterr().out
+    for alg in ALGS:
+        assert f"{alg}: pallas/reference" in out
+
+
+def test_summarize_raises_on_missing_matrix_cell(capsys):
+    """The regression this file exists for: a dropped cell must blow up
+    the summary, not vanish from it."""
+    result = _fake_result()
+    del result["sssp_bf"]["sharded_matrix"]["per_iter_s"]["pallas/async"]
+    with pytest.raises(KeyError, match="pallas/async"):
+        _summarize()("bench_accel", result)
+
+
+def test_recorded_baseline_summarizes_cleanly(baseline, capsys):
+    """The committed artifact itself must flow through the summary —
+    ties the golden file to the code that consumes it."""
+    _summarize()("bench_accel", baseline)
+    out = capsys.readouterr().out
+    assert out.count("pallas/reference") == len(ALGS)

@@ -51,9 +51,11 @@ def _converged_reference(alg):
     return _cref_cache[alg]
 
 
-def _elastic(prog, g, *, model="bsp", kills=(), slow=(), monitor=None):
+def _elastic(prog, g, *, model="bsp", kills=(), slow=(), monitor=None,
+             kernel="reference"):
     return plug.Middleware(
-        g, prog, daemon="sharded", upper="mesh", model=model,
+        g, prog, daemon=plug.get_daemon("sharded", kernel=kernel),
+        upper="mesh", model=model,
         num_shards=SHARDS, monitor=monitor,
         failures=plug.FailureSchedule(kills=kills, slow=slow),
         options=plug.PlugOptions(block_size=BLOCK))
@@ -90,6 +92,59 @@ def test_kill_equivalence_matrix(alg, model):
         np.testing.assert_array_equal(ref, res.state)
     else:
         np.testing.assert_allclose(res.state, ref, atol=1e-6, rtol=1e-5)
+
+
+@pytest.mark.parametrize("model", ["bsp", "async"])
+def test_kill_mid_run_with_pallas_kernel(model):
+    """The fused CSR tile daemon (kernel="pallas") survives a mid-run
+    kill exactly like the reference kernel: bind_shards re-compacts and
+    re-stacks the CSR tiles for the survivor mesh (reusing the already-
+    autotuned config — no re-sweep during migration) and the fixed
+    point stays bit-identical to the uninterrupted reference."""
+    from repro.kernels.autotune import CACHE
+
+    g = _graph("sssp_bf")
+    prog = sssp_bf(g)
+    mw = _elastic(prog, g, model=model, kills=[(KILL_IT, 2)],
+                  kernel="pallas")
+    assert mw._fused_kind == ("async" if model == "async" else "bsp")
+    sweeps_before_run = CACHE.sweeps
+    res = mw.run(max_iterations=REF_MAX_IT)
+    assert res.converged
+    migs = _migrations(res)
+    assert len(migs) == 1
+    assert migs[0]["killed"] == [2]
+    assert 2 not in migs[0]["device_ids"]
+    # migration re-stacked tiles with the pinned config: no extra sweep
+    assert CACHE.sweeps == sweeps_before_run
+    assert "csr" in mw.daemon.stacked  # still on the CSR fused path
+    np.testing.assert_array_equal(_converged_reference("sssp_bf"),
+                                  res.state)
+
+
+def test_straggler_drift_triggers_second_migration():
+    """Regression (satellite): straggler handling is continuous, not
+    once-per-device.  A device flagged and migrated-around once keeps
+    degrading; the monitor's capacity drift vs the acknowledged
+    placement crosses the threshold and a SECOND migration fires —
+    previously the fire-once ``_handled_stragglers`` set swallowed it."""
+    g = _graph()
+    prog = sssp_bf(g)
+    slow = [(1, d, 5.0 if d == 5 else 1.0) for d in range(SHARDS)]
+    slow += [(3, 5, 50.0)]  # same straggler, 10× worse after handling
+    mw = _elastic(prog, g, slow=slow)
+    res = mw.run(max_iterations=40)
+    migs = _migrations(res)
+    assert len(migs) == 2
+    assert migs[0]["stragglers"] == [5]
+    assert migs[1]["stragglers"] == [5]  # re-flagged via drift
+    assert all(m["repartitioned"] for m in migs)
+    sizes = np.array([p.num_edges for p in mw.partitions])
+    assert sizes[5] == sizes.min()  # entitlement kept shrinking
+    ref, _ = plug.run_reference(g, prog, max_iterations=40)
+    np.testing.assert_array_equal(ref, res.state)
+    # stable capacity afterwards: no further migrations on a re-run
+    assert not _migrations(mw.run(max_iterations=40))
 
 
 def test_migration_retargets_every_layer():
@@ -274,6 +329,23 @@ def test_monitor_drops_dead_host_samples():
     np.testing.assert_allclose(mon.batch_fractions(), [0.0, 0.5, 0.5])
     assert not mon.stragglers().any()
     assert mon.observed  # survivors still report
+
+
+def test_monitor_capacity_drift_tracking():
+    """FleetMonitor drift primitives: drift is 0 before any ack, tracks
+    the max relative per-host fraction change after one, and re-acking
+    absorbs the current view."""
+    mon = fault.FleetMonitor(num_hosts=4, drift_threshold=0.5)
+    assert mon.capacity_drift() == 0.0 and not mon.drifted()
+    for d in range(4):
+        mon.record(d, 1.0)
+    mon.ack_capacity()
+    assert mon.capacity_drift() == 0.0  # view unchanged since ack
+    mon.record(3, 20.0)  # host 3 degrades: its fraction collapses
+    assert mon.capacity_drift() > 0.5
+    assert mon.drifted()
+    mon.ack_capacity()  # placement absorbed the degraded view
+    assert mon.capacity_drift() == 0.0 and not mon.drifted()
 
 
 def test_rebalance_after_migration_uses_survivor_capacities_only():

@@ -78,10 +78,19 @@ def _compare(a, b, atol=1e-5):
     np.testing.assert_array_equal(np.isfinite(a), np.isfinite(b))
 
 
+def _make_daemon(daemon: str):
+    """Matrix rows are daemon *kinds*; kernel="pallas" rows run the fused
+    CSR tile program (per-shard and inside the sharded shard_map body)."""
+    if daemon == "sharded_pallas":
+        return plug.get_daemon("sharded", kernel="pallas")
+    return daemon  # registry names: "reference", "pallas", "sharded"
+
+
 @pytest.mark.parametrize("alg", sorted(_ALGS))
 @pytest.mark.parametrize("model", ["bsp", "gas", "async"])
 @pytest.mark.parametrize("upper", ["host", "mesh"])
-@pytest.mark.parametrize("daemon", ["reference", "sharded"])
+@pytest.mark.parametrize("daemon",
+                         ["reference", "pallas", "sharded", "sharded_pallas"])
 def test_equivalence_matrix(alg, model, upper, daemon):
     """plug.Middleware ≡ run_reference ≡ legacy GXEngine over the full
     {algorithm} × {computation model} × {upper system} × {daemon}
@@ -92,7 +101,7 @@ def test_equivalence_matrix(alg, model, upper, daemon):
     and compares at the fixed point."""
     g = _graph(alg)
     prog = _ALGS[alg](g)
-    mw = plug.Middleware(g, prog, daemon=daemon, upper=upper,
+    mw = plug.Middleware(g, prog, daemon=_make_daemon(daemon), upper=upper,
                          model=model, num_shards=SHARDS,
                          options=plug.PlugOptions(block_size=BLOCK))
     if model == "async":
@@ -118,7 +127,8 @@ def test_equivalence_matrix(alg, model, upper, daemon):
             # blocks, host fold, mesh collectives, the fused sharded
             # step) must agree bit for bit
             np.testing.assert_array_equal(ref, res.state)
-    assert mw._fused == (daemon == "sharded" and upper == "mesh")
+    sharded = daemon in ("sharded", "sharded_pallas")
+    assert mw._fused == (sharded and upper == "mesh")
     expected_kind = ("async" if model == "async" else "bsp") if mw._fused \
         else None
     assert mw._fused_kind == expected_kind

@@ -113,8 +113,8 @@ def test_sharded_daemon_partials_match_per_shard_aggregates():
     assert blocks_run.shape == (4,)
 
     # classic path: one run_blocks per shard, folded with the monoid.
-    # (Vertices with no contribution carry segment_min's +inf fill in
-    # both paths; the drive loops mask them via has_msg before Apply.)
+    # (Vertices with no contribution carry the monoid identity in both
+    # paths; the drive loops mask them via has_msg before Apply.)
     expect = np.full((g.num_vertices, prog.state_width), np.inf, np.float32)
     expect_cnt = np.zeros(g.num_vertices, np.int64)
     for j, bs in enumerate(mw.blocksets):
