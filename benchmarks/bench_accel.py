@@ -172,6 +172,66 @@ def _fault_recovery_row(g, *, block: int) -> dict:
     }
 
 
+def _compressed_train_row(steps: int) -> dict:
+    """The int8 error-feedback gradient wire (train.step grad_wire) vs
+    the uncompressed step on a tiny model: median step time, the loss
+    trajectory, the delayed-gradient mass at the end, and the wire-byte
+    accounting — the training-side twin of the sync-compression rows.
+    """
+    import time as _time
+
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.dist.collectives import collective_bytes_saved
+    from repro.models.model import Model
+    from repro.train.data import SyntheticLM
+    from repro.train.optimizer import AdamW, AdamWConfig
+    from repro.train.step import init_wire_state, make_train_step
+
+    cfg = get_reduced("stablelm-1.6b").replace(num_layers=2, dtype="float32",
+                                               param_dtype="float32")
+    model = Model(cfg)
+    rows: dict = {}
+    for wire in (None, "int8"):
+        params, _ = model.init(jax.random.PRNGKey(0))
+        opt = AdamW(AdamWConfig(peak_lr=3e-3, warmup_steps=2,
+                                total_steps=steps))
+        opt_state = opt.init(params)
+        jitted = jax.jit(make_train_step(model, opt, grad_wire=wire))
+        data = SyntheticLM(cfg.vocab_size, seq_len=32, global_batch=8, seed=1)
+        ws = init_wire_state(params) if wire else None
+        losses, times = [], []
+        metrics = {}
+        for _ in range(steps):
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in data.next_batch().items()}
+            t0 = _time.perf_counter()
+            if wire:
+                params, opt_state, ws, metrics = jitted(params, opt_state,
+                                                        ws, batch)
+            else:
+                params, opt_state, metrics = jitted(params, opt_state, batch)
+            losses.append(float(metrics["loss"]))  # blocks: real step time
+            times.append(_time.perf_counter() - t0)
+        row = {"step_time_s": float(np.median(times[2:])),
+               "loss_first": losses[0], "loss_last": losses[-1]}
+        if wire:
+            row["grad_wire_err"] = float(metrics["grad_wire_err"])
+        rows[wire or "baseline"] = row
+    # the wire a real pod would carry: the bf16 gradient volume vs int8
+    grad_bytes = sum(int(np.prod(p.shape)) * 2
+                     for p in jax.tree.leaves(params))
+    rows["wire_bytes_baseline"] = grad_bytes
+    rows["wire_bytes_saved"] = collective_bytes_saved(grad_bytes)
+    rows["step_time_ratio"] = (rows["int8"]["step_time_s"]
+                               / rows["baseline"]["step_time_s"])
+    rows["loss_delta_last"] = (rows["int8"]["loss_last"]
+                               - rows["baseline"]["loss_last"])
+    rows["steps"] = steps
+    return rows
+
+
 def run(small: bool = True, quick: bool = False) -> dict:
     g = DATASETS["orkut-mini"]()
     if quick:  # tier-2 CI slice: small graph, few iterations
@@ -223,6 +283,7 @@ def run(small: bool = True, quick: bool = False) -> dict:
         }
     out["fault_recovery"] = _fault_recovery_row(g,
                                                 block=256 if quick else 1024)
+    out["compressed_train"] = _compressed_train_row(steps=8 if quick else 20)
     # the autotune sweeps the pallas cells triggered above: chosen config
     # + the full per-config timing table, per (shape, monoid) signature —
     # auditable from BENCH_plug.json, not just the winning label
@@ -252,6 +313,12 @@ def main():
           f"{fr['iterations_to_reconverge']} its "
           f"(uninterrupted {fr['iterations_uninterrupted']}), "
           f"bit-identical={fr['state_bit_identical']}")
+    ct = results.pop("compressed_train")
+    print(f"compressed-train: int8 step {ct['int8']['step_time_s']*1e3:.0f}ms "
+          f"vs baseline {ct['baseline']['step_time_s']*1e3:.0f}ms "
+          f"(ratio {ct['step_time_ratio']:.2f}x), "
+          f"loss delta {ct['loss_delta_last']:+.4f}, "
+          f"wire saved {ct['wire_bytes_saved']}/{ct['wire_bytes_baseline']}B")
     for alg, r in results.items():
         if not (isinstance(r, dict) and "naive" in r):
             continue  # _meta / autotune

@@ -1,0 +1,177 @@
+"""Serving-layer latency/throughput baselines (DESIGN.md §5).
+
+Three tables, written to ``BENCH_serve.json`` by ``--quick`` (the tier-2
+baseline scripts/verify.sh --tier2 golden-pins):
+
+* ``batch_sweep`` — per query kind × batch size B: p50/p99 service time
+  of one fused run answering B queries, and the per-query throughput.
+  The batching claim in numbers: B queries cost close to one.
+* ``offered_load`` — a seeded open-loop workload (Poisson arrivals on
+  the virtual clock, mixed kinds, 20% repeats) replayed through the full
+  router at each offered rate: end-to-end p50/p99 (virtual queue wait +
+  wall service) and achieved throughput.
+* ``cache`` — the cache-hit row: wall time of a cold miss (one fused
+  run) vs re-submitting the same query (a dict lookup).
+
+Families are warmed (compiled) before any timed cell; compile time is a
+one-off cost the steady state never pays and would otherwise dominate
+every p99.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8").strip()
+
+import numpy as np  # noqa: E402
+
+from benchmarks.common import save  # noqa: E402
+from repro.graph import generate  # noqa: E402
+from repro.serve import (GraphServeRouter, GraphServeSession, Query,  # noqa: E402
+                         generate_workload, replay)
+
+SWEEP_KINDS = ("khop", "sssp", "ppr")
+KIND_PARAMS = {"khop": (("hops", 2),), "sssp": (), "ppr": ()}
+SHARDS = 8
+
+
+def _pct(xs, p):
+    return float(np.percentile(np.asarray(xs, np.float64), p))
+
+
+def _warm_families(session, batch_sizes):
+    """Compiles every family a timed cell will touch (kind × bucket, plus
+    the lookup analytics state) so no measurement pays compile time."""
+    rng = np.random.default_rng(0)
+    n = session.graph.num_vertices
+    buckets = set()
+    b = 1
+    while b <= session.max_batch:
+        buckets.add(b)
+        b *= 2
+    buckets.update(batch_sizes)
+    for kind in SWEEP_KINDS:
+        for b in sorted(buckets):
+            seeds = [int(s) for s in rng.integers(n, size=b)]
+            session.execute_batch(kind, KIND_PARAMS[kind], seeds)
+    session.execute_batch("lookup", (("field", "pagerank"),), [[0]])
+
+
+def _batch_sweep(session, batch_sizes, repeats: int) -> dict:
+    """p50/p99 service time and per-query throughput per kind × B."""
+    rng = np.random.default_rng(1)
+    n = session.graph.num_vertices
+    out: dict = {}
+    for kind in SWEEP_KINDS:
+        rows = {}
+        for b in batch_sizes:
+            times, iters = [], []
+            for _ in range(repeats):
+                seeds = [int(s) for s in rng.integers(n, size=b)]
+                t0 = time.perf_counter()
+                _, rec = session.execute_batch(kind, KIND_PARAMS[kind], seeds)
+                times.append(time.perf_counter() - t0)
+                iters.append(rec["iterations"])
+            rows[f"b{b}"] = {
+                "p50_ms": _pct(times, 50) * 1e3,
+                "p99_ms": _pct(times, 99) * 1e3,
+                "qps": b / float(np.mean(times)),
+                "iterations": float(np.mean(iters)),
+            }
+        out[kind] = rows
+    return out
+
+
+def _offered_load(session, loads, num_requests: int) -> dict:
+    """Full-router replay at each offered rate; a fresh router per rate
+    (clean queue/cache/clock), one shared session (warm families)."""
+    out = {}
+    for rate in loads:
+        router = GraphServeRouter(session, max_wait=0.005)
+        wl = generate_workload(
+            num_requests=num_requests,
+            num_vertices=session.graph.num_vertices, rate=rate,
+            seed=int(rate), repeat_fraction=0.2)
+        _, stats = replay(router, wl)
+        stats["offered_qps"] = rate
+        out[f"load_{int(rate)}"] = stats
+    return out
+
+
+def _cache_row(session) -> dict:
+    """Cold fused run vs cache hit for the same query."""
+    router = GraphServeRouter(session, max_wait=0.0)
+    q = Query.make("sssp", session.graph.num_vertices - 1)
+    t0 = time.perf_counter()
+    _, hit = router.submit(q)
+    assert hit is None
+    router.pump()
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    _, hit = router.submit(q)
+    hit_s = time.perf_counter() - t0
+    assert hit is not None and hit.cached
+    return {"cold_ms": cold * 1e3, "hit_ms": hit_s * 1e3,
+            "speedup": cold / max(hit_s, 1e-9)}
+
+
+def run(quick: bool = False) -> dict:
+    if quick:
+        g = generate.rmat(512, 4_096, seed=7)
+        batch_sizes, loads = (1, 4), (50.0, 200.0)
+        num_requests, repeats, max_batch = 40, 5, 4
+    else:
+        g = generate.rmat(2_000, 16_000, seed=7)
+        batch_sizes, loads = (1, 4, 8), (25.0, 100.0, 400.0)
+        num_requests, repeats, max_batch = 150, 10, 8
+    session = GraphServeSession(g, num_shards=SHARDS, max_batch=max_batch)
+    _warm_families(session, batch_sizes)
+    out = {
+        "batch_sweep": _batch_sweep(session, batch_sizes, repeats),
+        "offered_load": _offered_load(session, loads, num_requests),
+        "cache": _cache_row(session),
+    }
+    import jax
+    out["_meta"] = {
+        "api": "repro.serve", "quick": quick,
+        "graph": {"num_vertices": g.num_vertices, "num_edges": g.num_edges},
+        "num_shards": SHARDS, "max_batch": max_batch,
+        "batch_sizes": list(batch_sizes), "loads": list(loads),
+        "kinds": list(SWEEP_KINDS),
+        "num_requests": num_requests,
+        "families_compiled": len(session.compiled_families),
+        "num_devices": len(jax.devices()),
+    }
+    save("BENCH_serve" if quick else "bench_serve", out)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tier-2 slice; writes BENCH_serve.json baseline")
+    args = ap.parse_args()
+    r = run(quick=args.quick)
+    for kind, rows in r["batch_sweep"].items():
+        cells = "  ".join(
+            f"{b}: p50={c['p50_ms']:.1f}ms p99={c['p99_ms']:.1f}ms "
+            f"{c['qps']:.0f}q/s" for b, c in rows.items())
+        print(f"batch  {kind:5s} {cells}")
+    for name, s in r["offered_load"].items():
+        print(f"load   {name:9s} offered={s['offered_qps']:.0f}q/s "
+              f"achieved={s['throughput_qps']:.1f}q/s "
+              f"p50={s['p50_ms']:.1f}ms p99={s['p99_ms']:.1f}ms "
+              f"({s['cached']} hits/{s['completed']})")
+    c = r["cache"]
+    print(f"cache  cold={c['cold_ms']:.2f}ms hit={c['hit_ms']:.4f}ms "
+          f"({c['speedup']:.0f}x)")
+
+
+if __name__ == "__main__":
+    main()

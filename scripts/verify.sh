@@ -13,6 +13,11 @@
 # path.  Selects by pytest keyword ("kernel or pallas"), which catches
 # tests/test_kernels.py wholesale and the kernel="pallas" matrix rows.
 #
+# Fast serving slice (scripts/verify.sh --serve): the online-serving
+# surface — batched multi-source equivalence, admission determinism,
+# result-LRU semantics, mid-serve kill/join — for quick iteration on
+# src/repro/serve/ and the batched query programs.
+#
 # Tier-2 (scripts/verify.sh --tier2): one production dry-run slice
 # (1 arch × 1 shape × both meshes, compiled on 512 fake devices) plus the
 # acceleration benchmark on the repro.plug API — including the
@@ -36,6 +41,11 @@ if [[ "${1:-}" == "--kernels" ]]; then
     exec python -m pytest -q -k "kernel or pallas" "$@"
 fi
 
+if [[ "${1:-}" == "--serve" ]]; then
+    shift
+    exec python -m pytest -q tests/test_serve.py "$@"
+fi
+
 if [[ "${1:-}" == "--tier2" ]]; then
     shift
     echo "== tier-2: dry-run slice (stablelm-1.6b × train_4k × both meshes) =="
@@ -46,6 +56,8 @@ if [[ "${1:-}" == "--tier2" ]]; then
     # XLA_FLAGS itself (preserving any pre-set flags) for the 8-device
     # host-mesh sharded comparison
     python -m benchmarks.bench_accel --quick
+    echo "== tier-2: serving latency/throughput baseline (BENCH_serve.json) =="
+    python -m benchmarks.bench_serve --quick
     echo "tier-2 OK"
     exit 0
 fi

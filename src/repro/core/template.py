@@ -121,6 +121,22 @@ class VertexProgram:
     max_iterations: int = 100
     # Only edges whose src was active last iteration generate messages.
     frontier_driven: bool = True
+    # -- batched multi-query programs (repro.serve) ------------------------
+    # B > 0 declares the state a stack of B independent queries, each
+    # owning K/B consecutive state columns.  ``query_activity(old, new) ->
+    # (N, B) bool`` reports which vertices changed per query; the
+    # middleware then freezes converged queries by reverting their
+    # columns (early exit per query: a finished query stops contributing
+    # frontier work while its batch-mates keep running).  For idempotent
+    # monoids a quiet column IS its fixed point, so revert == commit and
+    # answers are bit-identical to B independent single-query runs.
+    num_queries: int = 0
+    query_activity: Callable[..., jnp.ndarray] | None = None
 
     def supports_sync_skipping(self) -> bool:
         return self.monoid.idempotent
+
+    def is_batched_query(self) -> bool:
+        """True iff this program declares the per-query convergence
+        contract (``plug.protocols.BatchQueryCapable``)."""
+        return self.num_queries > 0 and self.query_activity is not None

@@ -157,13 +157,20 @@ class FailureSchedule:
         per-device step-time report (the straggler seam): at that
         iteration the monitor records ``seconds`` for ``device``, as if
         the device itself had reported it.
+      recoveries: iterable of ``(iteration, device)`` pairs — the
+        elastic *join* seam: at that iteration the device reports back
+        healthy, the monitor un-marks it, and the middleware may grow
+        the mesh back (``Middleware.migrate`` plans from the enlarged
+        survivor set exactly as it plans shrinks).
     """
 
-    def __init__(self, kills=(), slow=()):
+    def __init__(self, kills=(), slow=(), recoveries=()):
         self._kills = sorted((int(k), int(d)) for k, d in kills)
         self._slow = sorted((int(k), int(d), float(s)) for k, d, s in slow)
+        self._recoveries = sorted((int(k), int(d)) for k, d in recoveries)
         self._next_kill = 0
         self._next_slow = 0
+        self._next_recovery = 0
 
     def kills_at(self, iteration: int) -> list[int]:
         """Devices whose kill events fire at (or before) ``iteration``;
@@ -186,15 +193,27 @@ class FailureSchedule:
             self._next_slow += 1
         return out
 
+    def recoveries_at(self, iteration: int) -> list[int]:
+        """Devices whose recovery events fire at (or before)
+        ``iteration``; each event is consumed exactly once."""
+        out = []
+        while (self._next_recovery < len(self._recoveries)
+               and self._recoveries[self._next_recovery][0] <= iteration):
+            out.append(self._recoveries[self._next_recovery][1])
+            self._next_recovery += 1
+        return out
+
     @property
     def exhausted(self) -> bool:
         return (self._next_kill == len(self._kills)
-                and self._next_slow == len(self._slow))
+                and self._next_slow == len(self._slow)
+                and self._next_recovery == len(self._recoveries))
 
     def reset(self) -> None:
         """Re-arms every event (a fresh run against the same schedule)."""
         self._next_kill = 0
         self._next_slow = 0
+        self._next_recovery = 0
 
 
 # --------------------------------------------------------------------------
@@ -234,6 +253,15 @@ class FleetMonitor:
         consumer can mix them back in)."""
         self._failed[host] = True
         self._times[host].clear()
+
+    def mark_recovered(self, host: int) -> None:
+        """Un-marks a dead host — the elastic *join* path.  The host
+        rejoins with an EMPTY step-time window (its pre-failure samples
+        were dropped by ``mark_failed`` and say nothing about the
+        recovered hardware), so until it reports, capacity views fall
+        back to the fleet mean for it — exactly how a never-seen host
+        is treated."""
+        self._failed[host] = False
 
     @property
     def failed(self) -> np.ndarray:

@@ -211,10 +211,185 @@ def bfs(graph: Graph, source: int = 0, max_iterations: int = 10_000) -> VertexPr
     )
 
 
+# --------------------------------------------------------------------------
+# Batched multi-source query variants (repro.serve).
+#
+# Each program stacks B independent queries into the state columns — the
+# (B, N) frontier stack is the transpose of the (N, K) state the engine
+# already runs, so ONE jitted step answers a whole batch.  All declare
+# the BatchQueryCapable contract (num_queries + query_activity): the
+# middleware freezes each query's columns the round they go quiet, so a
+# finished query stops feeding the shared frontier while its batch-mates
+# keep running (early exit per query).
+#
+# Equivalence contract (test-enforced, tests/test_serve.py):
+#   * min-monoid programs (batched_khop, batched_sssp): column b of the
+#     batched run is BIT-IDENTICAL to a single-query run of query b —
+#     extra messages generated by batch-mates' frontiers re-send a
+#     source's unchanged state and are no-ops under min, and a quiet
+#     column is its fixed point, so freeze-by-revert == commit.
+#   * sum-monoid batched_ppr: columns evolve independently (messages for
+#     column b read only column b), so answers are exact across batch
+#     compositions — the property caching needs — and within ``tol`` of
+#     an unmasked run (the freeze reverts one sub-tolerance apply).
+# --------------------------------------------------------------------------
+def _seed_lists(seeds, n: int) -> list[list[int]]:
+    """Normalizes query seeds: an int per query or an iterable per query
+    (multi-seed queries), vertex ids wrapped into range."""
+    out = []
+    for q in seeds:
+        ids = [q] if np.isscalar(q) else list(q)
+        if not ids:
+            raise ValueError("each query needs at least one seed vertex")
+        out.append([int(s) % n for s in ids])
+    return out
+
+
+def _min_query_activity(old, new):
+    return new < old  # (N, B): min-monoid state only ever decreases
+
+
+def batched_khop(graph: Graph, seeds, hops: int = 3,
+                 max_iterations: int | None = None) -> VertexProgram:
+    """B k-hop neighborhood queries as one program.
+
+    State column b holds the hop distance from query b's seed(s), INF
+    beyond ``hops`` — the budget clamp rejects any message that would
+    land past the horizon, so the frontier never grows beyond the k-hop
+    ball and the run converges in ≤ hops+1 iterations.  Membership =
+    ``state <= hops``; the distance itself is the useful answer.
+    """
+    lists = _seed_lists(seeds, graph.num_vertices)
+    b = len(lists)
+
+    def init(g: Graph):
+        n = g.num_vertices
+        state = np.full((n, b), INF, dtype=np.float32)
+        for q, ids in enumerate(lists):
+            state[ids, q] = 0.0
+        return state, np.zeros((n, 0), dtype=np.float32)
+
+    def msg_gen(src_state, dst_state, weight, src_aux):
+        return src_state + 1.0
+
+    def msg_apply(state, merged, has_msg, aux, t):
+        cand = jnp.minimum(state, merged)
+        new = jnp.where(cand <= float(hops), cand, state)
+        active = jnp.any(new < state, axis=-1)
+        return new, active
+
+    return VertexProgram(
+        name="batched_khop",
+        state_width=b,
+        aux_width=0,
+        monoid=MIN,
+        msg_gen=msg_gen,
+        msg_apply=msg_apply,
+        init=init,
+        max_iterations=max_iterations or hops + 2,
+        frontier_driven=True,
+        num_queries=b,
+        query_activity=_min_query_activity,
+    )
+
+
+def batched_sssp(graph: Graph, seeds,
+                 max_iterations: int = 10_000) -> VertexProgram:
+    """B shortest-path queries (single- or multi-seed each) as one
+    program: column b is the Bellman-Ford distance to the NEAREST of
+    query b's seeds (a multi-seed query initializes all its seeds at 0,
+    which under min is exactly the distance-to-set)."""
+    lists = _seed_lists(seeds, graph.num_vertices)
+    b = len(lists)
+
+    def init(g: Graph):
+        n = g.num_vertices
+        state = np.full((n, b), INF, dtype=np.float32)
+        for q, ids in enumerate(lists):
+            state[ids, q] = 0.0
+        return state, np.zeros((n, 0), dtype=np.float32)
+
+    return VertexProgram(
+        name="batched_sssp",
+        state_width=b,
+        aux_width=0,
+        monoid=MIN,
+        msg_gen=_sssp_msg_gen,
+        msg_apply=_sssp_msg_apply,
+        init=init,
+        max_iterations=max_iterations,
+        frontier_driven=True,
+        num_queries=b,
+        query_activity=_min_query_activity,
+    )
+
+
+def batched_ppr(graph: Graph, seeds, *, alpha: float = 0.85,
+                tol: float = 1e-6,
+                max_iterations: int = 50) -> VertexProgram:
+    """B personalized-PageRank queries as one program.
+
+    Column b runs the power iteration ``r' = (1-α)·e_b + α·P·r`` where
+    ``e_b`` is query b's restart distribution (uniform over its seed
+    set), carried in aux so a serving family can swap seed sets per
+    batch without recompiling (``Middleware.run(init=...)``).  Sum
+    monoid: not bit-exact vs an unmasked run (the per-query freeze
+    reverts one sub-``tol`` apply) but exact across batch compositions.
+    """
+    lists = _seed_lists(seeds, graph.num_vertices)
+    b = len(lists)
+
+    def init(g: Graph):
+        n = g.num_vertices
+        restart = np.zeros((n, b), dtype=np.float32)
+        for q, ids in enumerate(lists):
+            uniq = np.unique(np.asarray(ids, dtype=np.int64))
+            restart[uniq, q] = 1.0 / uniq.size
+        aux = np.concatenate(
+            [graph.out_degrees().reshape(n, 1), restart], axis=1)
+        return restart.copy(), aux
+
+    def msg_gen(src_state, dst_state, weight, src_aux):
+        deg = jnp.maximum(src_aux[:, :1], 1.0)
+        return src_state / deg
+
+    def msg_apply(state, merged, has_msg, aux, t):
+        restart = aux[:, 1:]
+        new = (1.0 - alpha) * restart + alpha * merged
+        active = jnp.max(jnp.abs(new - state), axis=-1) > tol
+        return new, active
+
+    def query_activity(old, new):
+        return jnp.abs(new - old) > tol
+
+    return VertexProgram(
+        name="batched_ppr",
+        state_width=b,
+        aux_width=1 + b,
+        monoid=SUM,
+        msg_gen=msg_gen,
+        msg_apply=msg_apply,
+        init=init,
+        max_iterations=max_iterations,
+        frontier_driven=False,
+        num_queries=b,
+        query_activity=query_activity,
+    )
+
+
 ALGORITHMS = {
     "pagerank": pagerank,
     "sssp_bf": sssp_bf,
     "label_prop": label_prop,
     "wcc": wcc,
     "bfs": bfs,
+}
+
+#: Batched multi-source query factories (repro.serve).  Signature:
+#: ``factory(graph, seeds, **params) -> VertexProgram`` where ``seeds``
+#: is one entry per query (an int or an iterable of ints).
+BATCHED_QUERIES = {
+    "khop": batched_khop,
+    "sssp": batched_sssp,
+    "ppr": batched_ppr,
 }

@@ -30,7 +30,7 @@ from repro.models.model import Model
 from repro.train import checkpoint as ckpt
 from repro.train.data import SyntheticLM
 from repro.train.optimizer import AdamW, AdamWConfig
-from repro.train.step import make_train_step
+from repro.train.step import init_wire_state, make_train_step
 
 
 def remesh_live_state(params, opt_state, axes, opt_axes, survivors):
@@ -89,6 +89,12 @@ def main(argv=None):
                     help="simulate losing one device at this step: elastic "
                          "re-mesh + checkpoint-free migration of the live "
                          "param/optimizer state onto the survivors")
+    ap.add_argument("--grad-wire", choices=("none", "int8"), default="none",
+                    help="compress the gradient through the int8 "
+                         "error-feedback wire round of dist.collectives "
+                         "before the optimizer (residuals live with the "
+                         "run, not the checkpoint)")
+    ap.add_argument("--grad-wire-bits", type=int, default=8)
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -121,13 +127,23 @@ def main(argv=None):
             start_step = restored["step"]
             print(f"resumed from step {start_step}")
 
-    step_fn = make_train_step(model, opt, microbatches=args.microbatches)
-    jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+    wire = None if args.grad_wire == "none" else args.grad_wire
+    step_fn = make_train_step(model, opt, microbatches=args.microbatches,
+                              grad_wire=wire,
+                              grad_wire_bits=args.grad_wire_bits)
+    wire_state = None
+    if wire:
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+        wire_state = jax.device_put(
+            init_wire_state(params),
+            shd.tree_shardings(init_wire_state(params), axes, mesh, rules))
+    else:
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
 
     losses = []
     t0 = time.time()
 
-    def run_steps(lo, hi, mesh, rules, params, opt_state):
+    def run_steps(lo, hi, mesh, rules, params, opt_state, wire_state):
         with mesh, shd.activation_sharding(mesh, rules):
             for step in range(lo, hi):
                 batch = {k: jax.numpy.asarray(v)
@@ -140,7 +156,12 @@ def main(argv=None):
                     batch["patch_embeds"] = 0.02 * jax.random.normal(
                         jax.random.PRNGKey(step),
                         (args.batch, cfg.num_patches, cfg.d_model))
-                params, opt_state, metrics = jitted(params, opt_state, batch)
+                if wire_state is None:
+                    params, opt_state, metrics = jitted(params, opt_state,
+                                                        batch)
+                else:
+                    params, opt_state, wire_state, metrics = jitted(
+                        params, opt_state, wire_state, batch)
                 losses.append(float(metrics["loss"]))
                 if step % args.log_every == 0 or step == args.steps - 1:
                     dt = time.time() - t0
@@ -152,26 +173,31 @@ def main(argv=None):
                     manager.maybe_save(step + 1, params=params,
                                        opt_state=opt_state,
                                        data_state=data.state_dict())
-        return params, opt_state
+        return params, opt_state, wire_state
 
     kill = args.kill_device_at
     if kill is not None and start_step < kill < args.steps:
-        params, opt_state = run_steps(start_step, kill, mesh, rules,
-                                      params, opt_state)
+        params, opt_state, wire_state = run_steps(
+            start_step, kill, mesh, rules, params, opt_state, wire_state)
         devices = list(mesh.devices.flat)
         survivors = devices[:-1]  # lose the mesh's last device
         t_mig = time.time()
         mesh, rules, params, opt_state = remesh_live_state(
             params, opt_state, axes, opt.state_axes(axes), survivors)
+        if wire_state is not None:
+            # the EF residuals migrate with the params (same axes tree)
+            wire_state = jax.device_put(
+                wire_state, shd.tree_shardings(wire_state, axes, mesh, rules))
         print(f"step {kill:5d} device lost → survivor mesh "
               f"{dict(mesh.shape)} over {mesh.devices.size}/{len(devices)} "
               f"devices, live state migrated checkpoint-free "
               f"({time.time() - t_mig:.2f}s)", flush=True)
-        params, opt_state = run_steps(kill, args.steps, mesh, rules,
-                                      params, opt_state)
+        params, opt_state, wire_state = run_steps(
+            kill, args.steps, mesh, rules, params, opt_state, wire_state)
     else:
-        params, opt_state = run_steps(start_step, args.steps, mesh, rules,
-                                      params, opt_state)
+        params, opt_state, wire_state = run_steps(
+            start_step, args.steps, mesh, rules, params, opt_state,
+            wire_state)
     first = np.mean(losses[:5])
     last = np.mean(losses[-5:])
     print(f"loss: first5={first:.4f} last5={last:.4f} "

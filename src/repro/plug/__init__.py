@@ -52,7 +52,7 @@ from repro.plug.daemons import (BlockedDaemon, NaiveDaemon, PipelinedDaemon,
                                 daemon_names, get_daemon, register_daemon)
 from repro.plug.middleware import (AsyncDriveLoop, DriveLoop, HostDriveLoop,
                                    Middleware, make_apply_fn)
-from repro.plug.protocols import (ComputationModel, Daemon,
+from repro.plug.protocols import (BatchQueryCapable, ComputationModel, Daemon,
                                   DevicePartialUpper, ElasticUpper,
                                   PlugOptions, PriorityAsyncModel, Result,
                                   ShardCapableDaemon, UpperSystem)
@@ -62,7 +62,8 @@ from repro.plug.uppers import (HostUpperSystem, MeshUpperSystem,
                                upper_system_names)
 
 __all__ = [
-    "BSP", "GAS", "AsyncDriveLoop", "AsyncModel", "BlockedDaemon",
+    "BSP", "GAS", "AsyncDriveLoop", "AsyncModel", "BatchQueryCapable",
+    "BlockedDaemon",
     "ComputationModel", "Daemon", "DevicePartialUpper", "DriveLoop",
     "ElasticUpper", "FailureSchedule", "FleetMonitor", "HostDriveLoop",
     "HostUpperSystem", "MeshUpperSystem", "Middleware",

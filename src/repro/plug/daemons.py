@@ -34,6 +34,7 @@ fits in ~20 lines).
 from __future__ import annotations
 
 import functools
+import hashlib
 
 import jax
 import jax.numpy as jnp
@@ -171,6 +172,13 @@ def gather_blocks(bs: BlockSet, sel: np.ndarray):
 # --------------------------------------------------------------------------
 # daemons
 # --------------------------------------------------------------------------
+def _stacked_field(st: dict, name: str):
+    """Resolves a flat field name ("vids", "csr/rows") in a stacked pytree."""
+    if name.startswith("csr/"):
+        return st.get("csr", {}).get(name[4:])
+    return st.get(name)
+
+
 def _live_edges(bs: BlockSet):
     """Extracts the real (unpadded) edges of a BlockSet as flat arrays."""
     live = bs.emask.reshape(-1)
@@ -310,10 +318,26 @@ class ShardedDaemon(VectorizedDaemon):
         self._auto_mesh = mesh is None
         self.axis = axis
         self._stacked = None
+        self._stacked_digests: dict = {}
+        self._donor = None
+        self.adopted_fields = 0  # stacked tensors adopted from the donor
         self._blocksets = None
         self._partials_fns: dict = {}
         self.num_shards = 0
         self.m = 0
+
+    def share_from(self, donor: "ShardedDaemon | None"):
+        """Declares a donor whose device-placed stacked block tensors
+        this daemon may ADOPT at its next :meth:`bind_shards` instead of
+        re-placing its own copies — the serving layer's seam: one graph,
+        many per-family middlewares, one set of block tensors on the
+        mesh.  Adoption is per-field and verified (same mesh/axis, and a
+        content digest of the host-side stack must match the donor's),
+        so a donor bound to a different graph, partitioning, or — after
+        an elastic migration — a different mesh simply contributes
+        nothing and this daemon places fresh tensors."""
+        self._donor = donor
+        return self
 
     def bind(self, program: VertexProgram, num_vertices: int):
         super().bind(program, num_vertices)
@@ -378,16 +402,39 @@ class ShardedDaemon(VectorizedDaemon):
             return jax.device_put(
                 a, shd.sharding_for(a.shape, axes, self.mesh, rules))
 
+        # Digest-verified adoption (see share_from): a field whose
+        # host-side stack hashes identically to the donor's reuses the
+        # donor's device-placed array instead of placing a duplicate.
+        # Digests are recorded unconditionally so THIS daemon can serve
+        # as a donor for the next family.
+        donor = self._donor
+        donor_ok = (donor is not None and donor is not self
+                    and getattr(donor, "_stacked", None) is not None
+                    and donor.mesh == self.mesh and donor.axis == self.axis)
+        self._stacked_digests = {}
+        self.adopted_fields = 0
+
+        def place_or_adopt(name, a):
+            d = hashlib.sha1(np.ascontiguousarray(a).tobytes()).hexdigest()
+            self._stacked_digests[name] = d
+            if donor_ok and donor._stacked_digests.get(name) == d:
+                adopted = _stacked_field(donor._stacked, name)
+                if adopted is not None and tuple(adopted.shape) == a.shape:
+                    self.adopted_fields += 1
+                    return adopted
+            return place(a)
+
         self._stacked = {
-            "vids": place(stack("vids")),
-            "lsrc": place(stack("lsrc")),
-            "ldst": place(stack("ldst")),
-            "weights": place(stack("weights")),
-            "emask": place(stack("emask", fill=False)),
-            "gsrc": place(stack("gsrc")),
+            "vids": place_or_adopt("vids", stack("vids")),
+            "lsrc": place_or_adopt("lsrc", stack("lsrc")),
+            "ldst": place_or_adopt("ldst", stack("ldst")),
+            "weights": place_or_adopt("weights", stack("weights")),
+            "emask": place_or_adopt("emask", stack("emask", fill=False)),
+            "gsrc": place_or_adopt("gsrc", stack("gsrc")),
         }
         if self.kernel == "pallas":
-            self._stacked["csr"] = self._stack_csr_tiles(blocksets, place)
+            self._stacked["csr"] = self._stack_csr_tiles(blocksets,
+                                                         place_or_adopt)
         self._partials_fns = {}
         return self
 
@@ -413,7 +460,7 @@ class ShardedDaemon(VectorizedDaemon):
         tiles = [pad_tileset(t, num_tiles=nt, row_tile=rt, src_tile=st)
                  for t in tiles]
         keys = tiles[0].arrays().keys()
-        return {k: place(np.stack([t.arrays()[k] for t in tiles]))
+        return {k: place("csr/" + k, np.stack([t.arrays()[k] for t in tiles]))
                 for k in keys}
 
     def remesh(self, mesh, *, blocksets=None):

@@ -105,13 +105,31 @@ def _async_model_is_fusable(model) -> bool:
 
 
 def make_apply_fn(program: VertexProgram):
+    batched = (program.num_queries > 0
+               and program.query_activity is not None)
+
     @jax.jit
     def apply_fn(state, merged, has_msg, aux, it):
         # Vertices with no message keep identity-merged values; msg_apply
         # implementations treat identity correctly (min/max) or use has_msg.
         merged = jnp.where(has_msg[:, None], merged,
                            jnp.full_like(merged, program.monoid.identity))
-        return program.msg_apply(state, merged, has_msg[:, None], aux, it)
+        new, active = program.msg_apply(state, merged, has_msg[:, None],
+                                        aux, it)
+        if batched:
+            # Per-query convergence masking (BatchQueryCapable): a query
+            # whose column stack went quiet is FROZEN by reverting its
+            # columns and dropped from the shared frontier — finished
+            # queries early-exit while batch-mates keep running.  Lives
+            # here, in the one apply wrapper every drive loop shares, so
+            # host, fused-BSP and fused-async paths all mask identically.
+            qact = program.query_activity(state, new)      # (N, B) bool
+            q_run = qact.any(axis=0)                       # (B,) still going
+            per_q = new.shape[1] // program.num_queries
+            colmask = jnp.repeat(q_run, per_q)             # (K,)
+            new = jnp.where(colmask[None, :], new, state)
+            active = (qact & q_run[None, :]).any(axis=1)
+        return new, active
 
     return apply_fn
 
@@ -279,7 +297,16 @@ class Middleware:
         return None
 
     # -- the drive loop ---------------------------------------------------
-    def run(self, max_iterations: int | None = None) -> Result:
+    def run(self, max_iterations: int | None = None, *,
+            init=None) -> Result:
+        """Drives the program to convergence.
+
+        ``init`` overrides ``program.init`` for this run only — the
+        serving layer's seam: one compiled middleware per query family
+        is reused across batches whose seeds/restart vectors enter as
+        *data* (``init(graph) -> (state0, aux)``, same shapes), so no
+        step is ever re-jitted per request batch.
+        """
         # Fresh per-run accounting: stats and LRU caches reset at loop
         # entry (regression: a second run() on the same instance reported
         # inflated cache/byte/round counters).
@@ -292,7 +319,7 @@ class Middleware:
             loops = {"bsp": DriveLoop, "async": AsyncDriveLoop,
                      None: HostDriveLoop}
             self._loop = loops[self._fused_kind](self)
-        return self._loop.run(max_iterations)
+        return self._loop.run(max_iterations, init=init)
 
     # -- elastic fault tolerance ------------------------------------------
     def _poll_faults(self, it: int) -> dict | None:
@@ -312,17 +339,31 @@ class Middleware:
         if mon is None:
             return None
         newly: list[int] = []
+        rejoined: list[int] = []
         if self.failures is not None:
             for dev, seconds in self.failures.slow_reports(it):
                 if not mon.failed[dev]:
                     mon.record(dev, seconds)
+            for dev in self.failures.recoveries_at(it):
+                if mon.failed[dev]:
+                    mon.mark_recovered(dev)
+                    rejoined.append(dev)
             for dev in self.failures.kills_at(it):
                 if not mon.failed[dev]:
                     mon.mark_failed(dev)
                     newly.append(dev)
         failed = mon.failed
         if any(failed[d] for d in self._mesh_device_ids):
-            return self.migrate(killed=newly)
+            return self.migrate(killed=newly, joined=rejoined)
+        if self._feasible_mesh_size() > len(self._mesh_device_ids):
+            # elastic JOIN: recovered devices let the mesh grow back —
+            # the same checkpoint-free migration, planned from the
+            # enlarged survivor set (migrate() is direction-agnostic).
+            # Keyed off the monitor's fleet view, not the consumed
+            # recovery event, so every middleware sharing this monitor
+            # (the serving layer runs one per query family) grows at its
+            # own next poll even though another one drained the event.
+            return self.migrate(joined=rejoined)
         if self._owns_partitions:
             # like the failure branch: only stragglers that actually
             # carry shards (sit in the active mesh) warrant a migration
@@ -339,7 +380,18 @@ class Middleware:
                 return self.migrate(stragglers=fresh or flagged)
         return None
 
-    def migrate(self, *, killed=(), stragglers=()) -> dict:
+    def _feasible_mesh_size(self) -> int:
+        """Largest mesh-axis length the surviving fleet can host: the
+        largest divisor of ``num_shards`` ≤ the number of alive devices.
+        Shrink and grow are the same computation — only ``alive``
+        moves."""
+        alive = int(self.monitor.alive_hosts)
+        for d in range(min(self.num_shards, alive), 0, -1):
+            if self.num_shards % d == 0:
+                return d
+        return 1
+
+    def migrate(self, *, killed=(), stragglers=(), joined=()) -> dict:
         """Checkpoint-free elastic migration onto the survivor mesh.
 
         Re-plans the shard placement from the monitor's view of the
@@ -381,11 +433,7 @@ class Middleware:
         alive = [int(d) for d in mon.alive_indices()]
         if not alive:
             raise ValueError("no surviving devices to migrate onto")
-        m_new = 1
-        for d in range(min(self.num_shards, len(alive)), 0, -1):
-            if self.num_shards % d == 0:
-                m_new = d
-                break
+        m_new = self._feasible_mesh_size()
         frac_fleet = mon.batch_fractions()  # dead hosts are exactly 0
         order = sorted(alive, key=lambda d: (-frac_fleet[d], d))
         chosen = sorted(order[:m_new])
@@ -418,6 +466,7 @@ class Middleware:
         return {
             "killed": [int(d) for d in killed],
             "stragglers": [int(d) for d in stragglers],
+            "joined": [int(d) for d in joined],
             "devices_before": len(before),
             "devices_after": m_new,
             "device_ids": [int(d) for d in chosen],
@@ -563,13 +612,14 @@ class HostDriveLoop:
             mw._estimator.update(j, entities, busy)
         return agg, cnt, boundary_reads.astype(np.int64)
 
-    def run(self, max_iterations: int | None = None) -> Result:
+    def run(self, max_iterations: int | None = None, *,
+            init=None) -> Result:
         mw = self.mw
         prog = mw.program
         o = mw.options
         mw.upper.reset()
         max_it = max_iterations or prog.max_iterations
-        state0, aux = prog.init(mw.graph)
+        state0, aux = (init or prog.init)(mw.graph)
         states = [state0.copy() for _ in range(mw.num_shards)]
         actives = [np.ones(mw.n, dtype=bool) for _ in range(mw.num_shards)]
         skip_ok = o.sync_skipping and prog.supports_sync_skipping()
@@ -708,12 +758,13 @@ class _FusedLoopBase:
     def _migrate_carry(self, carry):
         raise NotImplementedError
 
-    def run(self, max_iterations: int | None = None) -> Result:
+    def run(self, max_iterations: int | None = None, *,
+            init=None) -> Result:
         mw = self.mw
         prog = mw.program
         mw.upper.reset()
         max_it = max_iterations or prog.max_iterations
-        state0, aux = prog.init(mw.graph)
+        state0, aux = (init or prog.init)(mw.graph)
         rep = jax.sharding.NamedSharding(mw.daemon.mesh,
                                          jax.sharding.PartitionSpec())
         state = jax.device_put(state0, rep)

@@ -191,6 +191,47 @@ class DevicePartialUpper(Protocol):
 
 
 @runtime_checkable
+class BatchQueryCapable(Protocol):
+    """Optional *program* capability: a batch of B independent queries
+    stacked into the state columns (``repro.serve``'s contract).
+
+    A :class:`~repro.core.template.VertexProgram` exposing ``num_queries
+    > 0`` plus ``query_activity`` declares that its ``(N, K)`` state is
+    really a ``(B, N)`` query stack laid out column-major (each query
+    owns ``K/B`` consecutive columns — the transpose of the frontier
+    stack the serving layer batches).  ``query_activity(old, new) ->
+    (N, B)`` bool reports per-query vertex activity; the middleware's
+    apply wrapper (``plug.middleware.make_apply_fn``) reduces it to a
+    per-query run mask and **freezes converged queries by reverting
+    their columns**:
+
+    * a query whose column went quiet stops contributing to the shared
+      frontier — its batch-mates keep iterating, it early-exits;
+    * freeze-by-revert keeps the contract stateless (no done-flags in
+      the fused carries), and for **idempotent monoids** a quiet round
+      is already the column's fixed point, so revert == commit and the
+      batched answer is bit-identical to B independent single-query
+      runs (test-enforced; the serving cache relies on it: an answer
+      does not depend on which batch it rode in);
+    * for tolerance-converged sum-monoid programs (personalized
+      PageRank) the revert drops one sub-tolerance apply — answers are
+      within ``tol`` of an unmasked run, and *exactly* equal across
+      batch compositions, which is the property caching needs.
+
+    Every drive loop gets the masking for free because it lives in the
+    shared apply wrapper, not in any loop body.
+    """
+
+    num_queries: int
+
+    def query_activity(self, old_state, new_state):
+        ...
+
+    def is_batched_query(self) -> bool:
+        ...
+
+
+@runtime_checkable
 class ElasticUpper(Protocol):
     """Optional upper-system capability: survive a mid-run mesh change.
 

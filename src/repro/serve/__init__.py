@@ -1,0 +1,39 @@
+"""Online graph-query serving over the resident mesh (DESIGN.md §5).
+
+The first online workload axis of the reproduction: requests (k-hop
+neighborhood, single/multi-seed shortest path, personalized PageRank,
+label/state lookup) are admitted into a micro-batch queue, compiled as
+*multi-source* variants of the offline algorithms — a ``(B, N)``
+frontier stack instead of ``(N,)``, one fused step answering a whole
+batch — and cached in a result LRU with explicit invalidation wired to
+the elastic remesh/migration hooks.
+
+    from repro import serve
+    session = serve.GraphServeSession(graph, num_shards=8)
+    router = serve.GraphServeRouter(session)
+    t, hit = router.submit(serve.Query.make("sssp", 42))
+    router.clock.advance(0.01); router.pump()
+    answer = router.result(t)          # (N,) distances from vertex 42
+"""
+from repro.serve.cache import CacheStats, ServeCache
+from repro.serve.queue import AdmissionQueue, Query, VirtualClock
+from repro.serve.router import Answer, GraphServeRouter
+from repro.serve.session import (BATCH_KINDS, LOOKUP_FIELDS,
+                                 GraphServeSession)
+from repro.serve.workload import generate_workload, replay, summarize
+
+__all__ = [
+    "AdmissionQueue",
+    "Answer",
+    "BATCH_KINDS",
+    "CacheStats",
+    "GraphServeRouter",
+    "GraphServeSession",
+    "LOOKUP_FIELDS",
+    "Query",
+    "ServeCache",
+    "VirtualClock",
+    "generate_workload",
+    "replay",
+    "summarize",
+]

@@ -1,0 +1,125 @@
+"""Result/frontier LRU for the serving layer (DESIGN.md §5).
+
+Keyed like the sync-cache (``core.sync.LRUVertexCache``): bounded,
+recency-evicted, with EXPLICIT invalidation mirroring the graph_accel
+contract — the cache never guesses at staleness, the owner of the
+mutation tells it.  Two invalidation channels:
+
+* :meth:`invalidate` (vertex ids) — a graph/state mutation touched
+  these vertices; every entry whose dependency set intersects them is
+  dropped.  This is the ``graph_accel_invalidate`` mirror and the seam
+  a future mutation log plugs into.
+* :meth:`flush_volatile` — the mesh changed under the entries (PR 5
+  migration / elastic join).  Entries inserted as ``durable`` survive:
+  the batched min-monoid programs are bit-identical across a
+  migration (kill-recovery equivalence, PR 5), so their answers cannot
+  go stale when devices move.  Volatile entries — sum-monoid results
+  and anything proxying device-resident state — are dropped.  This is
+  what "migration flushes only the AFFECTED entries" means: the
+  bit-identity guarantee, not a heuristic, decides who survives.
+
+Sound caching at all requires answers independent of batch composition;
+that is exactly the ``BatchQueryCapable`` per-query freeze contract
+(see ``plug.protocols``), which is why this cache lives next to it.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    inserts: int = 0
+    evicted: int = 0
+    invalidated: int = 0
+    flushed: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class _Entry:
+    value: object
+    deps: np.ndarray  # vertex ids this answer depends on
+    durable: bool     # survives a mesh migration (bit-identity guarantee)
+
+
+class ServeCache:
+    """Bounded LRU of query answers with explicit invalidation."""
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 1:
+            raise ValueError("capacity must be ≥ 1")
+        self.capacity = int(capacity)
+        self._entries: collections.OrderedDict[tuple, _Entry] = (
+            collections.OrderedDict())
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+    def lookup(self, key):
+        """The answer for ``key``, or None.  A hit refreshes recency."""
+        entry = self._entries.get(key)
+        if entry is None:
+            self.stats.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.stats.hits += 1
+        return entry.value
+
+    def insert(self, key, value, *, deps=(), durable: bool = True) -> None:
+        """Caches ``value`` under ``key``.
+
+        deps: vertex ids the answer depends on — consulted by
+          :meth:`invalidate`.  For seed-local queries the seed set is
+          the minimal honest choice; an empty set means "never
+          invalidated by vertex mutation".
+        durable: False marks the entry placement-dependent; it is
+          dropped by :meth:`flush_volatile` on migration.
+        """
+        self._entries[key] = _Entry(
+            value=value,
+            deps=np.asarray(sorted({int(d) for d in deps}), dtype=np.int64),
+            durable=bool(durable))
+        self._entries.move_to_end(key)
+        self.stats.inserts += 1
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.stats.evicted += 1
+
+    def invalidate(self, vertex_ids) -> int:
+        """Drops every entry whose dependency set intersects
+        ``vertex_ids`` (the graph_accel ``invalidate`` contract); returns
+        how many were dropped."""
+        ids = np.asarray(list(vertex_ids), dtype=np.int64)
+        if ids.size == 0 or not self._entries:
+            return 0
+        drop = [k for k, e in self._entries.items()
+                if e.deps.size and np.isin(e.deps, ids).any()]
+        for k in drop:
+            del self._entries[k]
+        self.stats.invalidated += len(drop)
+        return len(drop)
+
+    def flush_volatile(self) -> int:
+        """Migration hook: drops every non-durable entry (answers whose
+        validity depended on the old placement), keeps the rest; returns
+        how many were dropped."""
+        drop = [k for k, e in self._entries.items() if not e.durable]
+        for k in drop:
+            del self._entries[k]
+        self.stats.flushed += len(drop)
+        return len(drop)
+
+    def clear(self) -> None:
+        self._entries.clear()

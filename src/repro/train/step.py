@@ -17,12 +17,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import pipeline as pl
+from repro.dist import collectives as coll
 from repro.models.model import Model
 from repro.train.optimizer import AdamW
 
+GRAD_WIRES = (None, "int8")
+
+
+def init_wire_state(params):
+    """Zero error-feedback residuals, one float32 tensor per parameter —
+    the carried state of ``grad_wire="int8"`` (see make_train_step)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
 
 def make_train_step(model: Model, optimizer: AdamW, *, microbatches: int = 1,
-                    microbatch_shardings=None):
+                    microbatch_shardings=None, grad_wire: str | None = None,
+                    grad_wire_bits: int = 8):
     """Returns train_step(params, opt_state, batch) -> (params, opt_state,
     metrics). Batch leaves lead with the global batch dim.
 
@@ -32,50 +42,97 @@ def make_train_step(model: Model, optimizer: AdamW, *, microbatches: int = 1,
     (B,...) → (n, B/n, ...) reshape and replicates every activation inside
     the layer scan (measured: 61 GiB/device instead of ~3 GiB on
     stablelm-1.6b × train_4k).
+
+    ``grad_wire="int8"`` puts the gradient through the compressed-wire
+    round of ``dist.collectives`` before the optimizer sees it: each
+    tensor is quantized to ``grad_wire_bits``-bit integers with one
+    per-tensor scale and the rounding error is fed back into the next
+    step's tensor (EF-SGD — no gradient mass lost, only delayed).  Under
+    GSPMD the cross-device reduce itself belongs to XLA, so this applies
+    the wire format at the seam we own — what every replica would have
+    put on an int8 wire — which reproduces its quality/step-time effect
+    exactly (integer accumulation of identical payloads is lossless;
+    the single shared-scale rounding IS the wire error, as in
+    ``collectives._int_wire_round``).  The flag changes the step
+    signature to ``(params, opt_state, wire_state, batch) -> (params,
+    opt_state, wire_state, metrics)``; seed ``wire_state`` with
+    :func:`init_wire_state`.
     """
+    if grad_wire not in GRAD_WIRES:
+        raise ValueError(f"grad_wire must be one of {GRAD_WIRES}, got "
+                         f"{grad_wire!r}")
 
     def grads_of(params, batch):
         return jax.value_and_grad(model.train_loss)(params, batch)
 
-    def train_step(params, opt_state, batch):
+    def wire_round(g, r):
+        t = g.astype(jnp.float32) + r
+        q, s = coll.quantize_int(t, grad_wire_bits)
+        sent = coll.dequantize_int(q, s)
+        return sent.astype(g.dtype), t - sent
+
+    def compute_grads(params, batch):
         if microbatches == 1:
-            loss, grads = grads_of(params, batch)
-        else:
-            def split(x):
-                b = x.shape[0]
-                assert b % microbatches == 0, (b, microbatches)
-                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+            return grads_of(params, batch)
 
-            mb = jax.tree.map(split, batch)
-            if microbatch_shardings is not None:
-                mb = jax.lax.with_sharding_constraint(mb, microbatch_shardings)
-            # accumulate in the parameter dtype: f32 zeros against bf16
-            # params drag every per-microbatch gradient collective up to f32
-            # (~2× wire on bf16-param models — §Perf B2); bf16 params imply
-            # the user accepted bf16 gradient precision anyway.
-            zeros = jax.tree.map(
-                lambda p: jnp.zeros(
-                    p.shape,
-                    p.dtype if p.dtype == jnp.bfloat16 else jnp.float32),
-                params)
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
 
-            def body(acc, b):
-                loss_acc, g_acc = acc
-                loss, grads = grads_of(params, b)
-                g_acc = jax.tree.map(
-                    lambda a, g: a + g.astype(a.dtype), g_acc, grads)
-                return (loss_acc + loss, g_acc), None
+        mb = jax.tree.map(split, batch)
+        if microbatch_shardings is not None:
+            mb = jax.lax.with_sharding_constraint(mb, microbatch_shardings)
+        # accumulate in the parameter dtype: f32 zeros against bf16
+        # params drag every per-microbatch gradient collective up to f32
+        # (~2× wire on bf16-param models — §Perf B2); bf16 params imply
+        # the user accepted bf16 gradient precision anyway.
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(
+                p.shape,
+                p.dtype if p.dtype == jnp.bfloat16 else jnp.float32),
+            params)
 
-            (loss, grads), _ = jax.lax.scan(
-                body, (jnp.zeros((), jnp.float32), zeros), mb)
-            inv = 1.0 / microbatches
-            loss = loss * inv
-            grads = jax.tree.map(lambda g: g * inv, grads)
+        def body(acc, b):
+            loss_acc, g_acc = acc
+            loss, grads = grads_of(params, b)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(a.dtype), g_acc, grads)
+            return (loss_acc + loss, g_acc), None
 
+        (loss, grads), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros), mb)
+        inv = 1.0 / microbatches
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = compute_grads(params, batch)
         params, opt_state, metrics = optimizer.update(params, grads, opt_state)
         return params, opt_state, {"loss": loss, **metrics}
 
-    return train_step
+    if grad_wire is None:
+        return train_step
+
+    def train_step_wire(params, opt_state, wire_state, batch):
+        loss, grads = compute_grads(params, batch)
+        leaves_g, treedef = jax.tree.flatten(grads)
+        leaves_r = treedef.flatten_up_to(wire_state)
+        sent, new_r = [], []
+        for g, r in zip(leaves_g, leaves_r):
+            s, nr = wire_round(g, r)
+            sent.append(s)
+            new_r.append(nr)
+        grads = treedef.unflatten(sent)
+        wire_state = treedef.unflatten(new_r)
+        # the gradient mass the wire delayed to the next step — the
+        # quality signal BENCH_plug.json's compressed_train block records
+        err = jnp.sqrt(sum(jnp.sum(r.astype(jnp.float32) ** 2)
+                           for r in new_r))
+        params, opt_state, metrics = optimizer.update(params, grads, opt_state)
+        return params, opt_state, wire_state, {
+            "loss": loss, "grad_wire_err": err, **metrics}
+
+    return train_step_wire
 
 
 def suggest_microbatches(global_batch: int, *, bytes_per_sample: int,

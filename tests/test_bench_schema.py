@@ -25,11 +25,13 @@ import pytest
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 BASELINE = REPO / "results" / "benchmarks" / "BENCH_plug.json"
+SERVE_BASELINE = REPO / "results" / "benchmarks" / "BENCH_serve.json"
 
 ALGS = ("pagerank", "sssp_bf", "label_prop")
 KERNELS = ("reference", "pallas")
 MODELS = ("bsp", "async")
 CELLS = tuple(f"{k}/{m}" for k, m in itertools.product(KERNELS, MODELS))
+SERVE_KINDS = ("khop", "sssp", "ppr")
 
 
 @pytest.fixture(scope="module")
@@ -38,6 +40,15 @@ def baseline():
         pytest.skip("tier-2 baseline not recorded "
                     "(run scripts/verify.sh --tier2)")
     with open(BASELINE) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def serve_baseline():
+    if not SERVE_BASELINE.exists():
+        pytest.skip("serve tier-2 baseline not recorded "
+                    "(run scripts/verify.sh --tier2)")
+    with open(SERVE_BASELINE) as f:
         return json.load(f)
 
 
@@ -94,6 +105,61 @@ def test_baseline_meta_and_fault_recovery_rows(baseline):
     fr = baseline["fault_recovery"]
     assert fr["state_bit_identical"] is True
     assert fr["devices_after"] < fr["devices_before"]
+
+
+def test_baseline_compressed_train_row(baseline):
+    """The int8 grad-wire comparison: both arms recorded, the wire
+    accounting consistent (int8 halves the bf16 baseline volume), and
+    the error-feedback residual present for the compressed arm."""
+    ct = baseline["compressed_train"]
+    for arm in ("baseline", "int8"):
+        assert ct[arm]["step_time_s"] > 0
+        assert ct[arm]["loss_last"] > 0
+    assert "grad_wire_err" in ct["int8"]
+    assert ct["wire_bytes_saved"] == ct["wire_bytes_baseline"] // 2
+    assert ct["step_time_ratio"] == pytest.approx(
+        ct["int8"]["step_time_s"] / ct["baseline"]["step_time_s"], rel=1e-9)
+
+
+# -- serving artifact schema -------------------------------------------------
+def test_serve_baseline_batch_sweep_covers_every_cell(serve_baseline):
+    """Every query-kind × batch-size cell, ≥3 kinds × ≥2 sizes, each
+    with sane percentiles and positive throughput."""
+    meta = serve_baseline["_meta"]
+    sizes = meta["batch_sizes"]
+    assert len(sizes) >= 2 and len(SERVE_KINDS) >= 3
+    sweep = serve_baseline["batch_sweep"]
+    assert set(sweep) == set(SERVE_KINDS)
+    for kind in SERVE_KINDS:
+        assert set(sweep[kind]) == {f"b{b}" for b in sizes}
+        for cell in sweep[kind].values():
+            assert 0 < cell["p50_ms"] <= cell["p99_ms"]
+            assert cell["qps"] > 0 and cell["iterations"] >= 1
+
+
+def test_serve_baseline_offered_load_rows(serve_baseline):
+    """One row per offered rate: end-to-end percentiles, achieved
+    throughput, and the per-kind breakdown covering every batched kind."""
+    meta = serve_baseline["_meta"]
+    rows = serve_baseline["offered_load"]
+    assert set(rows) == {f"load_{int(r)}" for r in meta["loads"]}
+    assert len(rows) >= 2
+    for row in rows.values():
+        assert row["completed"] == meta["num_requests"]
+        assert 0 < row["p50_ms"] <= row["p99_ms"]
+        assert row["throughput_qps"] > 0
+        assert set(SERVE_KINDS) <= set(row["kinds"])
+
+
+def test_serve_baseline_cache_hit_row(serve_baseline):
+    """The acceptance row: a cache hit is far cheaper than the cold
+    fused run that produced the entry."""
+    c = serve_baseline["cache"]
+    assert c["hit_ms"] < c["cold_ms"]
+    assert c["speedup"] > 10
+    meta = serve_baseline["_meta"]
+    assert meta["num_devices"] == 8 and meta["quick"] is True
+    assert meta["families_compiled"] >= len(SERVE_KINDS)
 
 
 # -- summary contract --------------------------------------------------------

@@ -1,0 +1,339 @@
+"""Online serving layer (DESIGN.md §5): batched multi-source queries,
+admission determinism, the result LRU, and elastic shrink+grow under
+live traffic.
+
+The acceptance surface test-enforced here:
+
+* a ``(B, N)`` batched run is BIT-identical to B single-source runs for
+  the idempotent (min-monoid) programs — including B=1, duplicate seeds
+  in one batch, and multi-seed queries — and per-query convergence
+  masking freezes finished columns without perturbing the rest;
+* admission/batching decisions are a pure function of submission order
+  and the seeded virtual clock (no wall clock): two replays produce
+  identical batch compositions;
+* the LRU honors hit/invalidate/flush_volatile, and a mid-serve device
+  kill (FailureSchedule) migrates the mesh, flushes ONLY the volatile
+  entries, and subsequent queries — including after the elastic join
+  grows the mesh back — still answer exactly."""
+import os
+
+# Must precede jax backend init (collection-time import): serving wants a
+# multi-device host mesh to shrink and grow.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro import plug, serve  # noqa: E402
+from repro.dist import fault  # noqa: E402
+from repro.graph import generate  # noqa: E402
+from repro.graph.algorithms import (batched_khop, batched_ppr,  # noqa: E402
+                                    batched_sssp)
+from repro.serve.queue import AdmissionQueue, Query, VirtualClock  # noqa: E402
+from repro.serve.workload import generate_workload, replay  # noqa: E402
+
+SHARDS = 8
+BLOCK = 256
+
+_cache: dict = {}
+
+
+def _graph():
+    if "g" not in _cache:
+        _cache["g"] = generate.rmat(256, 2048, seed=9)
+    return _cache["g"]
+
+
+def _session(**kw):
+    kw.setdefault("num_shards", SHARDS)
+    kw.setdefault("block_size", BLOCK)
+    return serve.GraphServeSession(_graph(), **kw)
+
+
+def _shared_session():
+    """One warm session reused by the read-only batched-equivalence
+    tests (family compiles dominate; state never leaks between runs —
+    every run re-inits from its own seeds)."""
+    if "session" not in _cache:
+        _cache["session"] = _session()
+    return _cache["session"]
+
+
+def _reference_column(factory, seed_set, max_iterations=300):
+    """The (N,) answer of a solo (B=1) run through the host reference."""
+    g = _graph()
+    state = plug.run_reference(g, factory(g, [seed_set]),
+                               max_iterations=max_iterations)[0]
+    return np.asarray(state)[:, 0]
+
+
+# --------------------------------------------------------------------------
+# batched ≡ single-source (the BatchQueryCapable contract)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("kind,factory,params", [
+    ("sssp", batched_sssp, ()),
+    ("khop", batched_khop, (("hops", 2),)),
+])
+def test_batched_bit_identical_to_single_source(kind, factory, params):
+    """B mixed queries (incl. a duplicate pair and a multi-seed set) in
+    ONE fused run == each query's solo reference, bitwise (min monoid:
+    idempotent, so freeze-by-revert is exact)."""
+    seeds = [3, 17, 17, (5, 9)]  # duplicate + multi-seed
+    kw = dict(params)
+    answers, rec = _shared_session().execute_batch(kind, params, seeds)
+    assert rec["converged"]
+    assert rec["durable"]  # min monoid ⇒ survives migration
+    for q, seed_set in enumerate(seeds):
+        ref = _reference_column(lambda g, s: factory(g, s, **kw), seed_set)
+        np.testing.assert_array_equal(answers[q], ref)
+    # duplicate seeds are bit-identical columns
+    np.testing.assert_array_equal(answers[1], answers[2])
+
+
+def test_batch_of_one_matches_reference():
+    answers, rec = _shared_session().execute_batch("sssp", (), [11])
+    ref = _reference_column(batched_sssp, 11)
+    np.testing.assert_array_equal(answers[0], ref)
+    assert rec["batch"] == 1 and rec["bucket"] == 1
+
+
+def test_all_converged_early_exit():
+    """A batch stops as soon as EVERY query's column is at its fixed
+    point — far before max_iterations — and no batch-mate drags a
+    finished column off its solo answer."""
+    session = _shared_session()
+    _, solo = session.execute_batch("khop", (("hops", 2),), [3])
+    answers, rec = session.execute_batch("khop", (("hops", 2),),
+                                         [3, 17, 17, 200])
+    assert rec["converged"]
+    assert rec["iterations"] < 20  # khop(2) needs ~4, max_iterations is 4+2
+    assert rec["iterations"] <= solo["iterations"] + 1
+    ref = _reference_column(lambda g, s: batched_khop(g, s, hops=2), 3)
+    np.testing.assert_array_equal(answers[0], ref)
+
+
+def test_ppr_independent_of_batch_composition():
+    """Sum-monoid PPR columns are independent (restart vectors live in
+    separate columns), so the same query answers identically whichever
+    batch it rides in — the property that makes caching PPR sound."""
+    session = _shared_session()
+    a_solo, _ = session.execute_batch("ppr", (), [7])
+    a_batch, rec = session.execute_batch("ppr", (), [7, (1, 2)])
+    np.testing.assert_array_equal(a_solo[0], a_batch[0])
+    assert not rec["durable"]  # sum monoid ⇒ flushed on migration
+
+
+def test_families_share_stacked_block_tensors():
+    """Per-family daemons adopt the first family's device-placed block
+    stacks (digest-verified) instead of duplicating them."""
+    session = _shared_session()
+    fams = [f["mw"].daemon for f in session._families.values()]
+    assert len(fams) >= 2
+    first = next(d for d in fams if d.adopted_fields == 0)
+    adopters = [d for d in fams if d is not first]
+    assert all(d.adopted_fields == 6 for d in adopters)
+    assert all(d._stacked["vids"] is first._stacked["vids"]
+               for d in adopters)
+
+
+# --------------------------------------------------------------------------
+# admission queue: deterministic micro-batching
+# --------------------------------------------------------------------------
+def test_queue_flushes_full_family_and_aged_family():
+    clock = VirtualClock()
+    q = AdmissionQueue(max_batch=2, max_wait=0.01, clock=clock)
+    a = Query.make("sssp", 1)
+    b = Query.make("sssp", 2)
+    c = Query.make("khop", 3, hops=2)
+    q.submit(a)
+    assert q.poll() == []  # neither full nor aged
+    q.submit(b)
+    q.submit(c)
+    due = q.poll()  # sssp family is full; khop neither
+    assert [[p.query for p in batch] for batch in due] == [[a, b]]
+    assert len(q) == 1
+    clock.advance(0.02)
+    due = q.poll()  # khop aged past max_wait
+    assert [[p.query for p in batch] for batch in due] == [[c]]
+    assert len(q) == 0
+
+
+def test_queue_is_deterministic_under_replay():
+    """Equal submissions + equal clock advances ⇒ equal batches, and
+    the wall clock never participates."""
+    def drive(queue, clock):
+        out = []
+        for i in range(7):
+            queue.submit(Query.make("sssp", i % 3))
+            queue.submit(Query.make("khop", i, hops=2))
+            clock.advance(0.002)
+            out.extend([(p.query, p.ticket) for p in batch]
+                       for batch in queue.poll())
+        out.extend([(p.query, p.ticket) for p in batch]
+                   for batch in queue.drain())
+        return out
+
+    runs = []
+    for _ in range(2):
+        clock = VirtualClock()
+        runs.append(drive(AdmissionQueue(max_batch=4, max_wait=0.005,
+                                         clock=clock), clock))
+    assert runs[0] == runs[1]
+
+
+def test_clock_rejects_negative_advance():
+    with pytest.raises(ValueError):
+        VirtualClock().advance(-1.0)
+
+
+def test_query_canonicalization():
+    """Seed order/duplicates never reach the cache key; params are part
+    of the family split."""
+    assert Query.make("sssp", (9, 3, 3)).cache_key == \
+        Query.make("sssp", [3, 9]).cache_key
+    assert Query.make("khop", 1, hops=2).family_key != \
+        Query.make("khop", 1, hops=3).family_key
+    with pytest.raises(ValueError):
+        Query.make("sssp", [])
+
+
+class _FakeSession:
+    """Records batch compositions; answers zeros.  No jax, no mesh."""
+
+    max_batch = 4
+
+    def __init__(self):
+        self.batches = []
+
+    def execute_batch(self, kind, params, seeds_list):
+        self.batches.append((kind, params, tuple(seeds_list)))
+        return [np.zeros(4) for _ in seeds_list], {
+            "kind": kind, "batch": len(seeds_list),
+            "bucket": len(seeds_list), "iterations": 1, "converged": True,
+            "service_s": 0.0, "durable": True, "migrations": [],
+            "mesh_epoch": 0}
+
+
+def test_replay_batches_are_deterministic():
+    wl = generate_workload(num_requests=60, num_vertices=100, rate=500.0,
+                           seed=5, repeat_fraction=0.3)
+    assert wl == generate_workload(num_requests=60, num_vertices=100,
+                                   rate=500.0, seed=5, repeat_fraction=0.3)
+    compositions = []
+    for _ in range(2):
+        fake = _FakeSession()
+        router = serve.GraphServeRouter(fake, max_batch=4, max_wait=0.005)
+        answers, stats = replay(router, wl)
+        assert stats["completed"] == 60
+        compositions.append(fake.batches)
+    assert compositions[0] == compositions[1]
+    assert any(b[2] and len(b[2]) > 1 for b in compositions[0])  # batching happened
+
+
+# --------------------------------------------------------------------------
+# result LRU
+# --------------------------------------------------------------------------
+def test_cache_hit_and_lru_eviction():
+    c = serve.ServeCache(capacity=2)
+    c.insert(("a",), 1)
+    c.insert(("b",), 2)
+    assert c.lookup(("a",)) == 1  # refreshes recency
+    c.insert(("c",), 3)           # evicts b (oldest)
+    assert ("b",) not in c and ("a",) in c and ("c",) in c
+    assert c.stats.evicted == 1 and c.stats.hits == 1
+    assert c.lookup(("b",)) is None
+    assert c.stats.misses == 1
+
+
+def test_cache_invalidate_by_vertex_deps():
+    c = serve.ServeCache()
+    c.insert(("a",), 1, deps=(3, 5))
+    c.insert(("b",), 2, deps=(7,))
+    c.insert(("c",), 3, deps=())  # no deps: never vertex-invalidated
+    assert c.invalidate([5, 99]) == 1
+    assert ("a",) not in c and ("b",) in c and ("c",) in c
+    assert c.stats.invalidated == 1
+
+
+def test_cache_flush_volatile_spares_durable():
+    c = serve.ServeCache()
+    c.insert(("durable",), 1, durable=True)
+    c.insert(("volatile",), 2, durable=False)
+    assert c.flush_volatile() == 1
+    assert ("durable",) in c and ("volatile",) not in c
+    assert c.stats.flushed == 1
+
+
+# --------------------------------------------------------------------------
+# elastic shrink + grow under live traffic
+# --------------------------------------------------------------------------
+def test_mid_serve_kill_migrates_flushes_volatile_and_keeps_serving():
+    """The acceptance scenario: warm family + cached answers, device
+    kill mid-batch (FailureSchedule), elastic recovery joins the device
+    back — the migration flushes ONLY volatile entries, durable answers
+    keep hitting, and post-migration queries answer exactly."""
+    mon = fault.FleetMonitor(num_hosts=SHARDS)
+    failures = plug.FailureSchedule(kills=[(5, 3)], recoveries=[(8, 3)])
+    session = _session(monitor=mon, failures=failures)
+    router = serve.GraphServeRouter(session, max_wait=0.0)
+
+    # 1. warm: khop(2) converges in ~4 its < kill iteration 5, so the
+    #    schedule stays unconsumed and its durable answer is cached
+    t_warm, _ = router.submit(Query.make("khop", 3, hops=2))
+    router.clock.advance(0.01)
+    assert router.pump() == 1
+    warm = router.result(t_warm)
+    assert warm is not None and not warm.cached
+    # a volatile entry that must NOT survive the migration
+    router.cache.insert(("sentinel",), 0, durable=False)
+
+    # 2. a long ppr run crosses iterations 5 and 8: kill then rejoin —
+    #    two migrations inside one fused run, serving never stops
+    t_ppr, _ = router.submit(Query.make("ppr", 7))
+    router.clock.advance(0.01)
+    assert router.pump() == 1
+    assert session.mesh_epoch == 2
+    ppr_fam = session._family("ppr", (), 1)
+    assert ppr_fam["mw"].daemon.m == SHARDS  # grown back to the full mesh
+    assert ("sentinel",) not in router.cache          # volatile flushed
+    assert router.cache.stats.flushed == 1            # ... and ONLY it
+    khop_key = Query.make("khop", 3, hops=2).cache_key
+    assert khop_key in router.cache                   # durable survived
+
+    # 3. the surviving entry still hits, bit-identical
+    t_hit, hit = router.submit(Query.make("khop", 3, hops=2))
+    assert hit is not None and hit.cached
+    np.testing.assert_array_equal(hit.value, warm.value)
+
+    # 4. post-join queries answer exactly (fresh family on the re-grown
+    #    mesh, and the post-migration ppr answer matches the reference)
+    # sum monoid across a mesh-size change: tolerance-close, not bitwise
+    ppr_ref = _reference_column(batched_ppr, 7, max_iterations=50)
+    np.testing.assert_allclose(router.result(t_ppr).value, ppr_ref,
+                               rtol=1e-4, atol=1e-5)
+    answers, rec = session.execute_batch("sssp", (), [3, (5, 9)])
+    ref = _reference_column(batched_sssp, 3)
+    np.testing.assert_array_equal(answers[0], ref)
+    assert rec["mesh_epoch"] == 2 and not rec["migrations"]
+
+
+def test_migration_record_reports_join():
+    """The grow path labels the rejoining device in the migration
+    record, mirroring how the shrink path labels the killed one."""
+    g = _graph()
+    from repro.graph.algorithms import sssp_bf
+
+    mw = plug.Middleware(
+        g, sssp_bf(g), daemon="sharded", upper="mesh", num_shards=SHARDS,
+        monitor=fault.FleetMonitor(num_hosts=SHARDS),
+        failures=plug.FailureSchedule(kills=[(2, 4)], recoveries=[(5, 4)]),
+        options=plug.PlugOptions(block_size=BLOCK))
+    res = mw.run(max_iterations=300)
+    migs = [r["migration"] for r in res.per_iteration if "migration" in r]
+    assert len(migs) == 2
+    assert migs[0]["killed"] == [4]
+    assert migs[0]["devices_after"] < migs[0]["devices_before"]
+    assert migs[1]["joined"] == [4]
+    assert migs[1]["devices_after"] == SHARDS
+    ref = plug.run_reference(g, sssp_bf(g), max_iterations=300)[0]
+    np.testing.assert_array_equal(np.asarray(res.state), np.asarray(ref))
