@@ -232,7 +232,191 @@ def _compressed_train_row(steps: int) -> dict:
     return rows
 
 
-def run(small: bool = True, quick: bool = False) -> dict:
+def _oocore_table(quick: bool, *, stream_edges: int | None = None) -> dict:
+    """Resident vs out-of-core vs out-of-core-without-prefetch at several
+    HBM budgets (DESIGN.md §6).
+
+    The workload is sssp on the road-network lattice — the canonical
+    out-of-core traversal: a wavefront frontier that touches a narrow
+    band of super-shards per iteration.  Two speedups are recorded per
+    budget.  ``prefetch_speedup`` is the full-run mean; the acceptance
+    number is ``sparse_slice.prefetch_speedup``, measured on the recorded
+    iterations where the frontier left at least half the cold
+    super-shards with no active source — there the prefetch scheduler
+    skips their uploads *and* their identity-contributing compute, while
+    the no-prefetch baseline (a plain synchronous streaming loop, no
+    scheduler) still streams every group.  On this host the mesh is 8
+    virtual devices on one CPU core, so transfer *hiding* contributes
+    little (``overlap_efficiency`` stays low and dense-frontier
+    iterations run near 1×); on an accelerator-attached host the same
+    schedule additionally hides the device_put behind compute.
+    """
+    import jax
+
+    from repro.graph import generate
+    from repro.oocore import OocoreConfig
+
+    side = 120 if quick else 200
+    iters = 30 if quick else 60
+    g = generate.grid_road(side, seed=1)
+    prog = sssp_bf(g)
+
+    def build(oc=None):
+        return plug.Middleware(g, prog, daemon="sharded", upper="mesh",
+                               num_shards=SHARDS, oocore=oc,
+                               options=plug.PlugOptions(block_size=256))
+
+    resident = build()
+    total_dev = (sum(x.nbytes for x in jax.tree.leaves(resident.daemon.stacked))
+                 // resident.daemon.m)
+    resident.run(max_iterations=iters)  # compile
+    ref = resident.run(max_iterations=iters)
+    resident_per_iter = ref.wall_time / max(1, ref.iterations)
+
+    def arm(budget, pf):
+        mw = build(OocoreConfig(hbm_budget=budget, hot_fraction=0.25,
+                                prefetch=pf))
+        mw.run(max_iterations=iters)  # compile
+        res = mw.run(max_iterations=iters)
+        return mw, res, [r["oocore"]["seconds"] for r in res.per_iteration]
+
+    rows = []
+    best_sparse = 0.0
+    for div in ((4, 8) if quick else (2, 4, 8)):
+        budget = int(total_dev // div)
+        pf_mw, pf_res, pf_t = arm(budget, True)
+        npf_mw, npf_res, npf_t = arm(budget, False)
+        st = pf_mw.oocore_stats
+        ss = int(st["super_shards"])
+        sparse = [i for i, r in enumerate(pf_res.per_iteration)
+                  if r["oocore"]["skipped"] * 2 >= ss]
+
+        def _speed(idx):
+            denom = sum(pf_t[i] for i in idx)
+            return sum(npf_t[i] for i in idx) / denom if denom else None
+
+        # iteration 1 pays first-touch costs in both arms; the table is
+        # steady-state like every other per-iteration cell here
+        full = list(range(1, min(len(pf_t), len(npf_t))))
+        sparse_speed = _speed(sparse) if sparse else None
+        if sparse_speed:
+            best_sparse = max(best_sparse, sparse_speed)
+        rows.append({
+            "hbm_budget": budget,
+            "budget_fraction": 1.0 / div,
+            "fits_resident": bool(pf_mw.daemon.oocore_plan.fits_resident),
+            "super_shards": ss,
+            "hot_cols": int(pf_mw.daemon.oocore_plan.hot_cols),
+            "per_iter_s": {
+                "resident": resident_per_iter,
+                "oocore_prefetch": float(np.mean([pf_t[i] for i in full])),
+                "oocore_no_prefetch": float(np.mean([npf_t[i] for i in full])),
+            },
+            "prefetch_speedup": _speed(full),
+            "sparse_slice": {
+                "iterations": ([min(sparse) + 1, max(sparse) + 1]
+                               if sparse else None),
+                "count": len(sparse),
+                "prefetch_speedup": sparse_speed,
+            },
+            "overlap_efficiency": float(st["overlap_efficiency"]),
+            "hot_hit_rate": float(st["hot_hit_rate"]),
+            "skipped_super_shards": int(st["skipped"]),
+            "uploads": int(st["uploads"]),
+            "upload_bytes": int(st["upload_bytes"]),
+            "bit_identical": bool(np.array_equal(pf_res.state, ref.state)
+                                  and np.array_equal(npf_res.state, ref.state)),
+        })
+    out = {
+        "algorithm": "sssp_bf",
+        "graph": {"generator": "grid_road", "side": side,
+                  "num_vertices": g.num_vertices, "num_edges": g.num_edges},
+        "iterations": iters,
+        "column_bytes_per_device": int(total_dev),
+        "hot_fraction": 0.25,
+        "budgets": rows,
+        "best_sparse_speedup": best_sparse,
+    }
+    if stream_edges:
+        out["stream"] = _oocore_stream_row(stream_edges)
+    return out
+
+
+def _oocore_stream_row(edges: int) -> dict:
+    """The big-input invocation (README: ``--oocore-edges 12000000``):
+    build a power-law graph with the streaming generator — the only one
+    that stays edge-list-native at >10⁷ edges — and run an out-of-core
+    pagerank slice with an explicit super-shard split, recording
+    generation time, per-iteration time, and the degree-ordered hot
+    set's hit rate (power-law inputs are where the cache earns its keep:
+    a small resident prefix covers most of the edge mass)."""
+    import time as _time
+
+    from repro.graph import generate
+    from repro.oocore import OocoreConfig
+
+    t0 = _time.perf_counter()
+    g = generate.rmat_stream(max(1 << 10, edges // 12), edges, seed=1)
+    gen_s = _time.perf_counter() - t0
+    mw = plug.Middleware(
+        g, pagerank(g), daemon="sharded", upper="mesh", num_shards=SHARDS,
+        oocore=OocoreConfig(num_super_shards=8, hot_fraction=0.25),
+        options=plug.PlugOptions(block_size=1024))
+    res = mw.run(max_iterations=3)
+    st = mw.oocore_stats
+    plan = mw.daemon.oocore_plan
+    return {
+        "generator": "rmat_stream",
+        "num_vertices": g.num_vertices,
+        "num_edges": g.num_edges,
+        "generate_s": gen_s,
+        "iterations": res.iterations,
+        "per_iter_s": res.wall_time / max(1, res.iterations),
+        "super_shards": int(plan.num_super_shards),
+        "hot_cols": int(plan.hot_cols),
+        "hot_hit_rate": float(st["hot_hit_rate"]),
+        "overlap_efficiency": float(st["overlap_efficiency"]),
+        "upload_bytes": int(st["upload_bytes"]),
+    }
+
+
+def _compressed_wire_row(g, *, block: int, iters: int) -> dict:
+    """``MeshUpperSystem(wire="compressed")`` accuracy and volume on the
+    sum-monoid workloads (the int8 error-feedback sync wire only admits
+    summed aggregates; min/max merges must stay exact).  Both arms run
+    the same host-loop composition — ``daemon="vectorized"`` under the
+    mesh upper — so the only difference is the wire, and the byte
+    counters come from the upper system's own accounting."""
+    rows = {}
+    for name, algf in (("pagerank", pagerank), ("label_prop", label_prop)):
+        prog = algf(g)
+        arms = {}
+        for wire in ("exact", "compressed"):
+            mw = plug.Middleware(
+                g, prog, daemon="vectorized",
+                upper=plug.MeshUpperSystem(wire=wire), num_shards=SHARDS,
+                options=plug.PlugOptions(block_size=block))
+            per_iter = _steady_state_per_iter(mw, iters)
+            res = mw.run(max_iterations=iters)
+            arms[wire] = {"per_iter_s": per_iter,
+                          "state": np.asarray(res.state),
+                          "wire_stats": dict(mw.upper.wire_stats)}
+        ws = arms["compressed"]["wire_stats"]
+        err = np.abs(arms["compressed"]["state"] - arms["exact"]["state"])
+        rows[name] = {
+            "per_iter_s": {w: arms[w]["per_iter_s"] for w in arms},
+            "max_abs_err": float(err.max()),
+            "mean_abs_err": float(err.mean()),
+            "exact_bytes": int(arms["exact"]["wire_stats"]["exact_bytes"]),
+            "compressed_bytes": int(ws["compressed_bytes"]),
+            "volume_ratio": (ws["compressed_bytes"]
+                             / max(1, arms["exact"]["wire_stats"]["exact_bytes"])),
+        }
+    return rows
+
+
+def run(small: bool = True, quick: bool = False,
+        oocore_edges: int | None = None) -> dict:
     g = DATASETS["orkut-mini"]()
     if quick:  # tier-2 CI slice: small graph, few iterations
         from repro.graph import generate
@@ -284,6 +468,10 @@ def run(small: bool = True, quick: bool = False) -> dict:
     out["fault_recovery"] = _fault_recovery_row(g,
                                                 block=256 if quick else 1024)
     out["compressed_train"] = _compressed_train_row(steps=8 if quick else 20)
+    out["oocore"] = _oocore_table(quick, stream_edges=oocore_edges)
+    out["compressed_wire"] = _compressed_wire_row(
+        g, block=256 if quick else 1024,
+        iters=iters["pagerank"] + 2)
     # the autotune sweeps the pallas cells triggered above: chosen config
     # + the full per-config timing table, per (shape, monoid) signature —
     # auditable from BENCH_plug.json, not just the winning label
@@ -303,8 +491,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="tier-2 slice; writes BENCH_plug.json baseline")
+    ap.add_argument("--oocore-edges", type=int, default=None, metavar="E",
+                    help="also stream-generate an E-edge power-law graph "
+                         "(rmat_stream) and record an out-of-core pagerank "
+                         "slice on it; E > 10^7 is the intended scale")
     args = ap.parse_args()
-    results = run(quick=args.quick)
+    results = run(quick=args.quick, oocore_edges=args.oocore_edges)
     fr = results.pop("fault_recovery")
     print(f"fault-recovery ({fr['algorithm']}): kill dev "
           f"{fr['kill']['device']} @ it {fr['kill']['iteration']} → "
@@ -313,6 +505,32 @@ def main():
           f"{fr['iterations_to_reconverge']} its "
           f"(uninterrupted {fr['iterations_uninterrupted']}), "
           f"bit-identical={fr['state_bit_identical']}")
+    oc = results.pop("oocore")
+    for row in oc["budgets"]:
+        sp = row["sparse_slice"]
+        print(f"oocore ({oc['algorithm']}, budget "
+              f"{row['budget_fraction']:.0%} of columns): "
+              f"ss={row['super_shards']} "
+              f"pf={row['per_iter_s']['oocore_prefetch']*1e3:.1f}ms "
+              f"npf={row['per_iter_s']['oocore_no_prefetch']*1e3:.1f}ms "
+              f"speedup={row['prefetch_speedup']:.2f}x "
+              f"(sparse slice {sp['iterations']}: "
+              f"{sp['prefetch_speedup'] or float('nan'):.2f}x) "
+              f"overlap={row['overlap_efficiency']:.2f} "
+              f"hit={row['hot_hit_rate']:.2f} "
+              f"bit-identical={row['bit_identical']}")
+    if "stream" in oc:
+        s = oc["stream"]
+        print(f"oocore stream: {s['num_edges']} edges generated in "
+              f"{s['generate_s']:.1f}s, pagerank "
+              f"{s['per_iter_s']:.2f}s/iter over {s['super_shards']} "
+              f"super-shards, hot hit rate {s['hot_hit_rate']:.2f}")
+    cw = results.pop("compressed_wire")
+    for alg, row in cw.items():
+        print(f"compressed-wire ({alg}): "
+              f"{row['compressed_bytes']}/{row['exact_bytes']}B "
+              f"({row['volume_ratio']:.2f}x volume), "
+              f"max|err|={row['max_abs_err']:.2e}")
     ct = results.pop("compressed_train")
     print(f"compressed-train: int8 step {ct['int8']['step_time_s']*1e3:.0f}ms "
           f"vs baseline {ct['baseline']['step_time_s']*1e3:.0f}ms "

@@ -18,15 +18,23 @@
 # result-LRU semantics, mid-serve kill/join — for quick iteration on
 # src/repro/serve/ and the batched query programs.
 #
+# Fast out-of-core slice (scripts/verify.sh --oocore): the super-shard
+# planner, bit-identity matrix (any split × any hot budget × prefetch
+# on/off × mid-run kill), prefetch scheduler stats, and the streaming
+# generator's memory regression — for quick iteration on src/repro/
+# oocore/, the daemon's bind_super_shards path, and graph/generate.py.
+#
 # Tier-2 (scripts/verify.sh --tier2): one production dry-run slice
 # (1 arch × 1 shape × both meshes, compiled on 512 fake devices) plus the
 # acceleration benchmark on the repro.plug API — including the
 # daemon="sharded" device-resident path on an 8-device host mesh, its
 # kernel={reference,pallas} × model={bsp,async} fused-loop matrix, and a
 # kill-at-iteration-k elastic recovery row (iterations-to-reconverge,
-# migration seconds, fixed-point bit-identity) — which records the
-# BENCH_plug.json baseline under results/benchmarks/ so the perf
-# trajectory of the fused drive loop is tracked PR over PR.
+# migration seconds, fixed-point bit-identity), the out-of-core table
+# (resident vs streamed super-shards vs no-prefetch at several HBM
+# budgets), and the compressed sync-wire accuracy/volume rows — which
+# records the BENCH_plug.json baseline under results/benchmarks/ so the
+# perf trajectory of the fused drive loop is tracked PR over PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -44,6 +52,11 @@ fi
 if [[ "${1:-}" == "--serve" ]]; then
     shift
     exec python -m pytest -q tests/test_serve.py "$@"
+fi
+
+if [[ "${1:-}" == "--oocore" ]]; then
+    shift
+    exec python -m pytest -q tests/test_oocore.py tests/test_generate.py "$@"
 fi
 
 if [[ "${1:-}" == "--tier2" ]]; then

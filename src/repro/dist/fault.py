@@ -348,3 +348,27 @@ class FleetMonitor:
                  ) -> np.ndarray:
         """Lemma-2 shard → host assignment over the current fleet state."""
         return reassign_shards(num_shards, self.batch_fractions(), cap=cap)
+
+
+def oocore_replan(num_cols: int, col_bytes_shard: int, num_shards: int,
+                  mesh_size: int, config):
+    """Re-plan super-shard ownership for a (possibly shrunken) mesh.
+
+    Out-of-core migration is more than moving resident shards: the HBM
+    budget is per *device*, and after a kill each survivor holds
+    ``num_shards / mesh_size`` shards' columns, so the per-device cost of
+    a column grows and the same budget buys fewer resident/streamed
+    columns.  This is the single place that conversion happens — both
+    the initial bind and every re-mesh call it, so the hot set and
+    super-shard count always reflect the *current* mesh.
+
+    ``config`` is a ``repro.oocore.OocoreConfig``; returns an
+    ``OocorePlan``.
+    """
+    from repro.oocore.config import plan_super_shards
+
+    if num_shards % mesh_size:
+        raise ValueError(f"num_shards={num_shards} not divisible by "
+                         f"mesh_size={mesh_size}")
+    col_bytes_dev = int(col_bytes_shard) * (num_shards // mesh_size)
+    return plan_super_shards(num_cols, col_bytes_dev, config)

@@ -288,3 +288,26 @@ def pad_tileset(ts: CSRTileSet, *, num_tiles: int, row_tile: int,
         w=pad(ts.w, ts.edge_tile), emask=pad(ts.emask, ts.edge_tile),
         gsrc=pad(ts.gsrc, ts.edge_tile), gdst=pad(ts.gdst, ts.edge_tile),
         eblock=pad(ts.eblock, ts.edge_tile, fill=-1))
+
+
+def tile_access_scores(gsrc: np.ndarray, emask: np.ndarray,
+                       degrees: np.ndarray) -> np.ndarray:
+    """Access-frequency proxy per edge group (CSR tile or padded block).
+
+    A group's score is the summed out-degree of its live source
+    vertices: groups touching hubs are re-read every iteration by every
+    frontier that reaches the hub, so they are the ones worth pinning in
+    the device-resident hot set.  Works on any ``(..., edges)`` layout —
+    ``(nt, ET)`` for one tileset or ``(s, nt, ET)`` for a stacked mesh.
+    """
+    return (degrees[gsrc] * emask).sum(axis=-1)
+
+
+def take_tiles(ts: CSRTileSet, order: np.ndarray) -> CSRTileSet:
+    """Reorder/select whole tiles of a tileset (cuts stay tile-aligned)."""
+    order = np.asarray(order, dtype=np.int64)
+    return dataclasses.replace(
+        ts, num_tiles=int(order.shape[0]),
+        rows=ts.rows[order], seg=ts.seg[order], lsrc=ts.lsrc[order],
+        svids=ts.svids[order], w=ts.w[order], emask=ts.emask[order],
+        gsrc=ts.gsrc[order], gdst=ts.gdst[order], eblock=ts.eblock[order])

@@ -1,0 +1,27 @@
+"""Out-of-core execution: host-resident super-shards + prefetch pipeline.
+
+Everything below the upper system used to assume the whole stacked block
+(or CSR tile) tensor fits on the mesh.  ``repro.oocore`` relaxes that:
+each shard's columns (blocks or tiles) are reordered by an
+access-frequency score, a *hot set* prefix stays permanently
+device-resident as a cache, and the cold remainder is cut into equal
+*super-shards* that live in host numpy memory and are streamed onto the
+mesh one at a time — double-buffered, so super-shard ``i+1`` uploads on
+a background thread while super-shard ``i`` runs the unchanged fused
+gather+Gen+Merge+Apply step.  Partials accumulate across super-shards
+with the program's monoid before the single upper-system merge, which
+keeps the result bit-identical to the all-resident path for idempotent
+monoids (min/max/or are selections — order and duplication free).
+"""
+from repro.oocore.config import OocoreConfig, OocorePlan, plan_super_shards
+from repro.oocore.prefetch import AsyncUploader
+from repro.oocore.supershard import SuperShardSet, build_super_shards
+
+__all__ = [
+    "OocoreConfig",
+    "OocorePlan",
+    "plan_super_shards",
+    "AsyncUploader",
+    "SuperShardSet",
+    "build_super_shards",
+]

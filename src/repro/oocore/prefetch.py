@@ -1,0 +1,70 @@
+"""Double-buffered async upload of super-shards onto the mesh.
+
+One background thread owns all host→device transfers.  The drive loop
+``take(i)``s the super-shard it is about to compute on and immediately
+``request(i+1)``s the next one, so the next transfer runs while the
+current fused step computes.  Timing is split into the two numbers the
+overlap-efficiency stat needs:
+
+* **transfer seconds** — wall time of the ``device_put`` + readiness
+  wait, measured inside the worker thread (what the copy actually
+  cost), and
+* **wait seconds** — how long ``take`` blocked the drive loop (what the
+  copy cost *the critical path*).
+
+``overlap_efficiency = 1 - wait/transfer``: 1.0 means every byte moved
+behind compute, 0.0 means the loop stalled for the full copy (the
+no-prefetch baseline by construction).
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable
+
+import jax
+
+
+class AsyncUploader:
+    """Single-worker prefetcher over an ``upload_fn(index) -> device tree``.
+
+    A single worker is deliberate: transfers are serialized with each
+    other (they share one bus) but overlap with compute, and with double
+    buffering at most one outstanding request exists at a time, so
+    device memory holds at most two cold super-shards.
+    """
+
+    def __init__(self, upload_fn: Callable[[int], Any]):
+        self._upload = upload_fn
+        self._ex = ThreadPoolExecutor(max_workers=1,
+                                      thread_name_prefix="oocore-upload")
+        self._pending: dict[int, Future] = {}
+
+    def request(self, index: int) -> None:
+        """Start uploading super-shard ``index`` if not already in flight."""
+        if index in self._pending:
+            return
+
+        def job():
+            t0 = time.perf_counter()
+            tree = self._upload(index)
+            jax.block_until_ready(tree)
+            return tree, time.perf_counter() - t0
+
+        self._pending[index] = self._ex.submit(job)
+
+    def take(self, index: int) -> tuple[Any, float, float]:
+        """Block until super-shard ``index`` is on device.
+
+        Returns ``(device_tree, transfer_seconds, wait_seconds)``.  If the
+        super-shard was never requested, this degenerates to a synchronous
+        upload (wait == transfer).
+        """
+        self.request(index)
+        t0 = time.perf_counter()
+        tree, transfer_s = self._pending.pop(index).result()
+        return tree, transfer_s, time.perf_counter() - t0
+
+    def close(self) -> None:
+        self._ex.shutdown(wait=False, cancel_futures=True)
+        self._pending.clear()

@@ -43,6 +43,14 @@ iterations the middleware detects dead/straggling devices, re-plans the
 survivor mesh, reassigns orphaned shards (Lemma 2), migrates the live
 on-mesh state with ``device_put`` (no checkpoint restore), rebuilds the
 jitted step, and resumes; both classes are re-exported here.
+
+Out-of-core execution (DESIGN.md §6): the same fused composition takes
+``oocore=OocoreConfig(hbm_budget=..., hot_fraction=...)`` — block/tile
+stacks then live in host memory, an access-frequency-ordered hot set
+stays device-resident, and cold super-shards stream onto the mesh
+behind compute via a double-buffered prefetch thread.  Bit-identical to
+the all-resident run for idempotent monoids, at graph sizes HBM alone
+could not hold.
 """
 from repro.dist.fault import FailureSchedule, FleetMonitor
 from repro.plug.computation import (BSP, GAS, AsyncModel, get_model,
@@ -51,10 +59,12 @@ from repro.plug.daemons import (BlockedDaemon, NaiveDaemon, PipelinedDaemon,
                                 ShardedDaemon, VectorizedDaemon,
                                 daemon_names, get_daemon, register_daemon)
 from repro.plug.middleware import (AsyncDriveLoop, DriveLoop, HostDriveLoop,
-                                   Middleware, make_apply_fn)
+                                   Middleware, OocoreDriveLoop, make_apply_fn)
+from repro.oocore import OocoreConfig
 from repro.plug.protocols import (BatchQueryCapable, ComputationModel, Daemon,
                                   DevicePartialUpper, ElasticUpper,
-                                  PlugOptions, PriorityAsyncModel, Result,
+                                  OutOfCoreCapable, PlugOptions,
+                                  PriorityAsyncModel, Result,
                                   ShardCapableDaemon, UpperSystem)
 from repro.plug.reference import run_reference
 from repro.plug.uppers import (HostUpperSystem, MeshUpperSystem,
@@ -67,7 +77,8 @@ __all__ = [
     "ComputationModel", "Daemon", "DevicePartialUpper", "DriveLoop",
     "ElasticUpper", "FailureSchedule", "FleetMonitor", "HostDriveLoop",
     "HostUpperSystem", "MeshUpperSystem", "Middleware",
-    "NaiveDaemon", "PipelinedDaemon", "PlugOptions", "PriorityAsyncModel",
+    "NaiveDaemon", "OocoreConfig", "OocoreDriveLoop", "OutOfCoreCapable",
+    "PipelinedDaemon", "PlugOptions", "PriorityAsyncModel",
     "Result", "ShardCapableDaemon", "ShardedDaemon", "UpperSystem",
     "VectorizedDaemon", "daemon_names", "get_daemon", "get_model",
     "get_upper_system", "make_apply_fn", "model_names", "register_daemon",

@@ -325,6 +325,12 @@ class ShardedDaemon(VectorizedDaemon):
         self._partials_fns: dict = {}
         self.num_shards = 0
         self.m = 0
+        # out-of-core state (bind_super_shards); None => resident mode
+        self._oocore_config = None
+        self._super_shards = None
+        self.oocore_plan = None
+        self.hot_stacked = None
+        self.num_super_shards = 0
 
     def share_from(self, donor: "ShardedDaemon | None"):
         """Declares a donor whose device-placed stacked block tensors
@@ -344,6 +350,9 @@ class ShardedDaemon(VectorizedDaemon):
         # a rebind invalidates the stacked layout and compiled bodies
         self._stacked = None
         self._partials_fns = {}
+        self._super_shards = None
+        self.hot_stacked = None
+        self.num_super_shards = 0
         return self
 
     @property
@@ -360,47 +369,9 @@ class ShardedDaemon(VectorizedDaemon):
         layout is rectangular and one compiled program serves all
         devices.
         """
-        from repro.dist import sharding as shd
-
-        if axis is not None:
-            self.axis = axis
-        if mesh is not None:
-            self.mesh = mesh
-            self._auto_mesh = False
-        self._blocksets = list(blocksets)
-        s = len(blocksets)
-        vbs = {bs.vblock_size for bs in blocksets}
-        bbs = {bs.block_size for bs in blocksets}
-        if len(vbs) != 1 or len(bbs) != 1:
-            raise ValueError(
-                "bind_shards needs one (block, vblock) shape across shards; "
-                f"got B={sorted(bbs)} VB={sorted(vbs)}")
-        if self._auto_mesh or self.mesh is None:
-            self.mesh = shd.divisor_mesh(s, self.axis)
-        self.m = self.mesh.shape[self.axis]
-        if s % self.m:
-            raise ValueError(f"num_shards={s} not divisible by mesh axis "
-                             f"{self.axis}={self.m}")
-        self.num_shards = s
-        nb_max = max(bs.num_blocks for bs in blocksets)
-
-        def stack(field, fill=0):
-            arrs = []
-            for bs in blocksets:
-                a = getattr(bs, field)
-                pad = nb_max - a.shape[0]
-                if pad:
-                    a = np.concatenate(
-                        [a, np.full((pad,) + a.shape[1:], fill, a.dtype)])
-                arrs.append(a)
-            return np.stack(arrs)
-
-        rules = {"shards": (self.axis,)}
-
-        def place(a):
-            axes = ("shards",) + (None,) * (a.ndim - 1)
-            return jax.device_put(
-                a, shd.sharding_for(a.shape, axes, self.mesh, rules))
+        self._setup_shard_mesh(blocksets, mesh, axis)
+        host = self._host_block_stacks(blocksets)
+        place = self._place_stack
 
         # Digest-verified adoption (see share_from): a field whose
         # host-side stack hashes identically to the donor's reuses the
@@ -424,19 +395,72 @@ class ShardedDaemon(VectorizedDaemon):
                     return adopted
             return place(a)
 
-        self._stacked = {
-            "vids": place_or_adopt("vids", stack("vids")),
-            "lsrc": place_or_adopt("lsrc", stack("lsrc")),
-            "ldst": place_or_adopt("ldst", stack("ldst")),
-            "weights": place_or_adopt("weights", stack("weights")),
-            "emask": place_or_adopt("emask", stack("emask", fill=False)),
-            "gsrc": place_or_adopt("gsrc", stack("gsrc")),
-        }
+        self._stacked = {k: place_or_adopt(k, a) for k, a in host.items()}
         if self.kernel == "pallas":
             self._stacked["csr"] = self._stack_csr_tiles(blocksets,
                                                          place_or_adopt)
         self._partials_fns = {}
+        self._oocore_config = None
+        self._super_shards = None
+        self.oocore_plan = None
+        self.hot_stacked = None
+        self.num_super_shards = 0
         return self
+
+    def _setup_shard_mesh(self, blocksets, mesh, axis):
+        """Shared head of bind_shards / bind_super_shards: validate the
+        shard layout and resolve the mesh axis it is stacked over."""
+        from repro.dist import sharding as shd
+
+        if axis is not None:
+            self.axis = axis
+        if mesh is not None:
+            self.mesh = mesh
+            self._auto_mesh = False
+        self._blocksets = list(blocksets)
+        s = len(blocksets)
+        vbs = {bs.vblock_size for bs in blocksets}
+        bbs = {bs.block_size for bs in blocksets}
+        if len(vbs) != 1 or len(bbs) != 1:
+            raise ValueError(
+                "bind_shards needs one (block, vblock) shape across shards; "
+                f"got B={sorted(bbs)} VB={sorted(vbs)}")
+        if self._auto_mesh or self.mesh is None:
+            self.mesh = shd.divisor_mesh(s, self.axis)
+        self.m = self.mesh.shape[self.axis]
+        if s % self.m:
+            raise ValueError(f"num_shards={s} not divisible by mesh axis "
+                             f"{self.axis}={self.m}")
+        self.num_shards = s
+
+    def _host_block_stacks(self, blocksets):
+        """Every shard's block tensors stacked on a leading shard axis,
+        padded to a common block count with dead blocks — host numpy."""
+        nb_max = max(bs.num_blocks for bs in blocksets)
+
+        def stack(field, fill=0):
+            arrs = []
+            for bs in blocksets:
+                a = getattr(bs, field)
+                pad = nb_max - a.shape[0]
+                if pad:
+                    a = np.concatenate(
+                        [a, np.full((pad,) + a.shape[1:], fill, a.dtype)])
+                arrs.append(a)
+            return np.stack(arrs)
+
+        return {"vids": stack("vids"), "lsrc": stack("lsrc"),
+                "ldst": stack("ldst"), "weights": stack("weights"),
+                "emask": stack("emask", fill=False), "gsrc": stack("gsrc")}
+
+    def _place_stack(self, a):
+        """Place one host stack: shard axis 0 over the mesh axis."""
+        from repro.dist import sharding as shd
+
+        rules = {"shards": (self.axis,)}
+        axes = ("shards",) + (None,) * (a.ndim - 1)
+        return jax.device_put(
+            a, shd.sharding_for(a.shape, axes, self.mesh, rules))
 
     def _stack_csr_tiles(self, blocksets, place):
         """Compacts every shard's blockset into CSR tiles, pads them to a
@@ -463,6 +487,92 @@ class ShardedDaemon(VectorizedDaemon):
         return {k: place("csr/" + k, np.stack([t.arrays()[k] for t in tiles]))
                 for k in keys}
 
+    # -- out-of-core (OutOfCoreCapable) ----------------------------------
+    def bind_super_shards(self, blocksets, *, mesh=None, axis=None,
+                          config=None):
+        """Out-of-core binding: host column stacks + device hot set.
+
+        Instead of placing the full stacked tensors on the mesh
+        (:meth:`bind_shards`), the columns — padded blocks, or CSR tiles
+        under ``kernel="pallas"`` — are kept in host numpy memory,
+        reordered hottest-first by an access-frequency score (summed
+        live out-degree, :func:`repro.graph.compaction.tile_access_scores`),
+        and split per ``config`` (an ``OocoreConfig``): the hot prefix is
+        placed once and stays device-resident; the cold remainder is cut
+        into equal super-shards served by :meth:`upload_super_shard`.
+        Super-shard width is planned against the *current* mesh size
+        (``dist.fault.oocore_replan``), so a post-kill ``remesh``
+        automatically re-plans ownership for the survivors' larger
+        per-device column cost.
+        """
+        from repro.dist import fault as dist_fault
+        from repro.graph.compaction import tile_access_scores
+        from repro.oocore.supershard import build_super_shards
+
+        if config is None:
+            config = self._oocore_config
+        if config is None:
+            raise ValueError("bind_super_shards needs an OocoreConfig")
+        self._setup_shard_mesh(blocksets, mesh, axis)
+        if self.kernel == "pallas":
+            fields = self._stack_csr_tiles(blocksets, lambda name, a: a)
+        else:
+            fields = self._host_block_stacks(blocksets)
+        gsrc, emask = fields["gsrc"], fields["emask"]
+        deg = np.bincount(gsrc[emask].ravel(), minlength=self.n)
+        scores = tile_access_scores(gsrc, emask, deg)
+        num_cols = scores.shape[1]
+        col_bytes_shard = sum(
+            int(a.itemsize) * int(np.prod(a.shape[2:], dtype=np.int64))
+            for a in fields.values())
+        plan = dist_fault.oocore_replan(num_cols, col_bytes_shard,
+                                        self.num_shards, self.m, config)
+        sss = build_super_shards(fields, scores, plan)
+        self._super_shards = sss
+        self._oocore_config = config
+        self.oocore_plan = plan
+        self.num_super_shards = plan.num_super_shards
+        self.hot_stacked = (self._wrap_oocore(
+            {k: self._place_stack(a) for k, a in sss.hot_host.items()})
+            if sss.hot_host is not None else None)
+        self._stacked = None
+        self._stacked_digests = {}
+        self.adopted_fields = 0
+        self._partials_fns = {}
+        return self
+
+    def upload_super_shard(self, index: int):
+        """``device_put`` cold super-shard ``index`` over the mesh axis;
+        returns a pytree accepted by ``run_all_shards(stacked=...)``."""
+        if self._super_shards is None:
+            raise RuntimeError("upload_super_shard before bind_super_shards")
+        host = self._super_shards.cold_hosts[index]
+        return self._wrap_oocore(
+            {k: self._place_stack(a) for k, a in host.items()})
+
+    @property
+    def super_shard_nbytes(self) -> int:
+        """Host bytes of one cold super-shard (== one transfer)."""
+        return (self._super_shards.super_shard_nbytes
+                if self._super_shards is not None else 0)
+
+    def super_shard_active(self, index: int, active) -> bool:
+        """Does cold super-shard ``index`` touch any active source?
+
+        The host-side twin of the kernels' per-edge ``emask &
+        active[gsrc]`` frontier mask: if no live source of the group is
+        active, every one of its edges is masked and its partial is
+        exactly the monoid identity — the prefetch scheduler skips the
+        upload *and* the compute without changing a bit of the result.
+        """
+        srcs = self._super_shards.cold_srcs[index]
+        return bool(np.any(active[srcs])) if srcs.size else False
+
+    def _wrap_oocore(self, placed):
+        # run_all_shards dispatches the pallas body on a "csr" key in the
+        # stacked pytree; block-kernel stacks pass through unwrapped
+        return {"csr": placed} if self.kernel == "pallas" else placed
+
     def remesh(self, mesh, *, blocksets=None):
         """Re-stacks the bound block tensors over a (smaller) survivor
         mesh axis — the daemon half of checkpoint-free migration.
@@ -481,6 +591,13 @@ class ShardedDaemon(VectorizedDaemon):
             if blocksets is None:
                 raise RuntimeError(
                     "ShardedDaemon.remesh called before bind_shards")
+        if self._oocore_config is not None:
+            # out-of-core binding: re-plan super-shard ownership for the
+            # survivor mesh (per-device column cost grew), not just the
+            # resident placement
+            return self.bind_super_shards(blocksets, mesh=mesh,
+                                          axis=self.axis,
+                                          config=self._oocore_config)
         return self.bind_shards(blocksets, mesh=mesh, axis=self.axis)
 
     def _partials_fn(self, use_frontier: bool, per_device: bool = False):

@@ -63,7 +63,8 @@ from repro.graph.structure import EdgePartition, Graph
 from repro.plug.computation import BSP, GAS, AsyncModel, get_model
 from repro.plug.daemons import get_daemon
 from repro.plug.protocols import (DevicePartialUpper, ElasticUpper,
-                                  PlugOptions, PriorityAsyncModel, Result,
+                                  OutOfCoreCapable, PlugOptions,
+                                  PriorityAsyncModel, Result,
                                   ShardCapableDaemon)
 from repro.plug.uppers import get_upper_system
 
@@ -177,11 +178,13 @@ class Middleware:
         capacities=None,
         monitor: "dist_fault.FleetMonitor | None" = None,
         failures: "dist_fault.FailureSchedule | None" = None,
+        oocore=None,
         options: PlugOptions | None = None,
     ):
         self.graph = graph
         self.program = program
         self.options = options or PlugOptions()
+        self.oocore = oocore  # OocoreConfig | None — out-of-core execution
         self.daemon = get_daemon(daemon) if isinstance(daemon, str) else daemon
         self.upper = (get_upper_system(upper) if isinstance(upper, str)
                       else upper)
@@ -213,7 +216,13 @@ class Middleware:
         self._estimator = CapacityEstimator(self.num_shards)
         self._fused_kind = self._detect_fused()
         self._fused = self._fused_kind is not None
-        if self._fused:
+        self.oocore_stats: dict = {}
+        if self._fused_kind == "oocore":
+            self.daemon.bind_super_shards(self.blocksets,
+                                          mesh=self.upper.mesh,
+                                          axis=self.upper.axis,
+                                          config=self.oocore)
+        elif self._fused:
             self.daemon.bind_shards(self.blocksets, mesh=self.upper.mesh,
                                     axis=self.upper.axis)
         self._loop = None
@@ -283,6 +292,26 @@ class Middleware:
         caps = (isinstance(self.daemon, ShardCapableDaemon)
                 and isinstance(self.upper, DevicePartialUpper)
                 and getattr(self.upper, "wire", "exact") == "exact")
+        if self.oocore is not None:
+            # out-of-core is opt-in and never silently falls back: a
+            # composition that can't stream super-shards is a config
+            # error, not a reason to run all-resident anyway
+            if not caps:
+                raise ValueError(
+                    "oocore= needs the fused device-resident loop: a "
+                    "shard-capable daemon (daemon='sharded') with a "
+                    "device-partial upper system over an exact wire "
+                    "(upper='mesh')")
+            if not isinstance(self.daemon, OutOfCoreCapable):
+                raise ValueError(
+                    f"daemon {type(self.daemon).__name__} cannot bind "
+                    "super-shards (see plug.protocols.OutOfCoreCapable)")
+            if not _model_is_fusable(self.model):
+                raise ValueError(
+                    "oocore= supports the barriered BSP/GAS step only — "
+                    "the async model's held partials assume the full "
+                    "column range is resident every iteration")
+            return "oocore"
         if not caps:
             return None
         if _model_is_fusable(self.model):
@@ -315,9 +344,10 @@ class Middleware:
             LRUVertexCache(self.options.cache_capacity)
             for _ in range(self.num_shards)
         ]
+        self.oocore_stats = {}
         if self._loop is None:
             loops = {"bsp": DriveLoop, "async": AsyncDriveLoop,
-                     None: HostDriveLoop}
+                     "oocore": OocoreDriveLoop, None: HostDriveLoop}
             self._loop = loops[self._fused_kind](self)
         return self._loop.run(max_iterations, init=init)
 
@@ -532,7 +562,12 @@ class Middleware:
         self._setup_blocks()
         self.daemon.bind(self.program, self.n)
         self.upper.bind(self.program, self.num_shards)
-        if self._fused:
+        if self._fused_kind == "oocore":
+            self.daemon.bind_super_shards(self.blocksets,
+                                          mesh=self.upper.mesh,
+                                          axis=self.upper.axis,
+                                          config=self.oocore)
+        elif self._fused:
             self.daemon.bind_shards(self.blocksets, mesh=self.upper.mesh,
                                     axis=self.upper.axis)
         self._loop = None
@@ -872,6 +907,193 @@ class DriveLoop(_FusedLoopBase):
         state, active, done, n_active, blocks_run = self._step(
             *carry, aux, it, stacked)
         return (state, active), done, n_active, blocks_run, {}
+
+
+class OocoreDriveLoop(_FusedLoopBase):
+    """Out-of-core fused drive loop: stream super-shards, overlap uploads.
+
+    Each iteration runs the *same* fused gather+Gen+Merge partial step as
+    :class:`DriveLoop`, but once per column group instead of once: first
+    over the device-resident hot set, then over each cold super-shard as
+    it arrives from host memory.  Per-device partials accumulate across
+    groups with the program's monoid — neutral by construction (empty
+    segments already carry the identity inside every group) — and the
+    upper-system collective merge + Apply + convergence run exactly once
+    at the end, so the state trajectory matches the all-resident fused
+    loop bit-identically for idempotent monoids.
+
+    With ``prefetch`` on, a single background thread ``device_put``s
+    super-shard ``i+1`` while super-shard ``i`` computes (double
+    buffering: at most two cold groups on device), wrapping around so
+    the *next iteration's* first group uploads during this iteration's
+    tail.  For frontier-driven programs the same scheduler is
+    frontier-aware: a cold group none of whose live sources are active
+    contributes exactly the identity, so its upload and compute are
+    skipped outright (see ``ShardedDaemon.super_shard_active``).  The
+    per-iteration record and ``Middleware.oocore_stats`` carry the
+    split the acceptance cares about: transfer seconds (measured in
+    the worker), wait seconds (how long the critical path actually
+    stalled), their ratio as ``overlap_efficiency``, skipped-group
+    counts, and hot-set hit/miss counters (active columns served from
+    cache vs streamed).
+    """
+
+    def __init__(self, mw: Middleware):
+        super().__init__(mw)
+        self._uploader = None
+
+    def _build_step(self):
+        from repro.oocore.prefetch import AsyncUploader
+
+        mw = self.mw
+        daemon, upper, apply_fn = mw.daemon, mw.upper, mw._apply_fn
+        monoid = mw.program.monoid
+        use_frontier = (mw.program.frontier_driven
+                        and mw.options.frontier_block_skipping)
+
+        def partial(state, aux, active, acc_p, acc_c, stacked):
+            p, c, blocks_run = daemon.run_all_shards(
+                state, aux, active if use_frontier else None,
+                stacked=stacked)
+            return monoid.combine(acc_p, p), acc_c + c, blocks_run
+
+        def finalize(state, acc_p, acc_c, aux, it):
+            agg, cnt = upper.merge_partials(acc_p, acc_c)
+            new_state, new_active = apply_fn(state, agg, cnt > 0, aux, it)
+            n_active = new_active.sum()
+            return new_state, new_active, n_active == 0, n_active
+
+        self._partial = jax.jit(partial)
+        self._finalize = jax.jit(finalize)
+        self._use_frontier = use_frontier
+        # identity-filled per-device partial accumulators, sharded like
+        # the daemon's partials so the combine stays collective-free
+        part = jax.sharding.NamedSharding(
+            mw.upper.mesh, jax.sharding.PartitionSpec(mw.upper.axis))
+        self._acc0 = (
+            jax.device_put(np.full((daemon.m, mw.n, mw.k),
+                                   monoid.identity, np.float32), part),
+            jax.device_put(np.zeros((daemon.m, mw.n), np.int32), part),
+        )
+        if self._uploader is not None:
+            self._uploader.close()
+        self._uploader = None
+        if mw.oocore.prefetch and daemon.num_super_shards > 0:
+            self._uploader = AsyncUploader(daemon.upload_super_shard)
+            self._uploader.request(0)  # warm the pipe before iteration 1
+        return (self._partial, self._finalize)
+
+    def _init_carry(self, state, active):
+        return (state, active)
+
+    def _migrate_carry(self, carry):
+        return tuple(self.mw.upper.migrate(list(carry)))
+
+    def _advance(self, carry, aux, it, stacked):
+        # `stacked` is the resident pytree of the other fused loops —
+        # unused here: columns come from the hot cache + the host stream
+        mw = self.mw
+        daemon = mw.daemon
+        state, active = carry
+        acc_p, acc_c = self._acc0
+        num_ss = daemon.num_super_shards
+        t_iter = time.perf_counter()
+        transfer_s = wait_s = 0.0
+        hot_br = None
+        cold_br = None
+        if daemon.hot_stacked is not None:
+            acc_p, acc_c, hot_br = self._partial(
+                state, aux, active, acc_p, acc_c, daemon.hot_stacked)
+        todo = list(range(num_ss))
+        if (self._uploader is not None and self._use_frontier and num_ss):
+            # frontier-aware streaming: a cold group none of whose live
+            # sources are active contributes exactly the monoid identity
+            # (the kernels mask those edges anyway), so the scheduler
+            # skips its upload *and* its compute — the dominant saving on
+            # sparse-frontier iterations.  The no-prefetch baseline has
+            # no scheduler and streams every group.
+            host_active = np.asarray(jax.device_get(active))
+            todo = [p for p in todo
+                    if daemon.super_shard_active(p, host_active)]
+        skipped = num_ss - len(todo)
+        uploads = len(todo)
+        if self._uploader is not None:
+            for i, p in enumerate(todo):
+                dev, tr, wt = self._uploader.take(p)
+                transfer_s += tr
+                wait_s += wt
+                # double buffer: next group uploads while this one
+                # computes; the wrap-around request is iteration it+1's
+                # first-group guess (a stale guess is never wasted —
+                # group content is immutable, so a pending upload stays
+                # valid until some later iteration takes it)
+                self._uploader.request(todo[(i + 1) % len(todo)])
+                acc_p, acc_c, br = self._partial(
+                    state, aux, active, acc_p, acc_c, dev)
+                cold_br = br if cold_br is None else cold_br + br
+                del dev
+        else:
+            for p in range(num_ss):
+                # no-prefetch baseline: upload and compute strictly
+                # serialized, every transfer fully on the critical path
+                t0 = time.perf_counter()
+                dev = daemon.upload_super_shard(p)
+                jax.block_until_ready(dev)
+                tr = time.perf_counter() - t0
+                transfer_s += tr
+                wait_s += tr
+                acc_p, acc_c, br = self._partial(
+                    state, aux, active, acc_p, acc_c, dev)
+                jax.block_until_ready(acc_c)
+                cold_br = br if cold_br is None else cold_br + br
+                del dev
+        new_state, new_active, done, n_active = self._finalize(
+            state, acc_p, acc_c, aux, it)
+        jax.block_until_ready(new_state)
+        iter_s = time.perf_counter() - t_iter
+
+        hot_hits = int(jax.device_get(hot_br).sum()) if hot_br is not None else 0
+        misses = int(jax.device_get(cold_br).sum()) if cold_br is not None else 0
+        if hot_br is None:
+            blocks_run = cold_br
+        elif cold_br is None:
+            blocks_run = hot_br
+        else:
+            blocks_run = hot_br + cold_br
+        total = hot_hits + misses
+        overlap = 1.0 if transfer_s <= 0 else max(0.0, 1.0 - wait_s / transfer_s)
+        rec = {"super_shards": num_ss,
+               "hot_cols": int(daemon.oocore_plan.hot_cols),
+               "prefetch": self._uploader is not None,
+               "seconds": iter_s,
+               "transfer_s": transfer_s, "wait_s": wait_s,
+               "hidden_s": transfer_s - wait_s,
+               "overlap_efficiency": overlap,
+               "skipped": skipped,
+               "hot_hits": hot_hits, "cold_misses": misses,
+               "hot_hit_rate": hot_hits / total if total else 0.0}
+        st = mw.oocore_stats
+        if not st:
+            st.update(iterations=0, transfer_s=0.0, wait_s=0.0,
+                      hidden_s=0.0, hot_hits=0, cold_misses=0, uploads=0,
+                      upload_bytes=0, skipped=0, super_shards=num_ss,
+                      prefetch=self._uploader is not None)
+        st["iterations"] += 1
+        st["transfer_s"] += transfer_s
+        st["wait_s"] += wait_s
+        st["hidden_s"] += transfer_s - wait_s
+        st["hot_hits"] += hot_hits
+        st["cold_misses"] += misses
+        st["uploads"] += uploads
+        st["upload_bytes"] += uploads * daemon.super_shard_nbytes
+        st["skipped"] += skipped
+        seen = st["hot_hits"] + st["cold_misses"]
+        st["hot_hit_rate"] = st["hot_hits"] / seen if seen else 0.0
+        st["overlap_efficiency"] = (
+            1.0 if st["transfer_s"] <= 0
+            else max(0.0, 1.0 - st["wait_s"] / st["transfer_s"]))
+        return ((new_state, new_active), done, n_active, blocks_run,
+                {"oocore": rec})
 
 
 class AsyncDriveLoop(_FusedLoopBase):

@@ -136,6 +136,37 @@ class ShardCapableDaemon(Protocol):
 
 
 @runtime_checkable
+class OutOfCoreCapable(Protocol):
+    """Optional daemon capability: graphs bigger than the mesh's HBM.
+
+    An out-of-core daemon keeps its column stacks (padded blocks or CSR
+    tiles) in host memory, pins an access-frequency-ordered hot prefix
+    on device, and serves the cold remainder as equal *super-shards*
+    uploaded on demand.  The middleware feature-detects this protocol
+    when ``Middleware(oocore=...)`` is passed and switches to the
+    out-of-core drive loop, which accumulates ``run_all_shards``
+    partials across super-shards with the program's monoid before the
+    single upper-system merge — bit-identical to the all-resident fused
+    path for idempotent monoids.
+    """
+
+    num_super_shards: int
+    hot_stacked: object      # placed stack of the resident hot set, or None
+    oocore_plan: object      # OocorePlan of the current binding
+    super_shard_nbytes: int  # host bytes of one cold super-shard
+
+    def bind_super_shards(self, blocksets, *, mesh=None, axis=None,
+                          config=None):
+        """Cut shards' column stacks into hot set + host super-shards."""
+        ...
+
+    def upload_super_shard(self, index: int):
+        """``device_put`` cold super-shard ``index``; returns a stacked
+        pytree accepted by ``run_all_shards(stacked=...)``."""
+        ...
+
+
+@runtime_checkable
 class UpperSystem(Protocol):
     """Distributed-system side: partition, exchange, global merge."""
 

@@ -121,6 +121,58 @@ def test_baseline_compressed_train_row(baseline):
         ct["int8"]["step_time_s"] / ct["baseline"]["step_time_s"], rel=1e-9)
 
 
+def test_baseline_oocore_table(baseline):
+    """The out-of-core acceptance rows: at least two HBM budgets, every
+    budget smaller than the column range (the graph must NOT fit —
+    that's acceptance (a), and each such row still reports bit-identity
+    with the all-resident run), all three arms recorded per row with the
+    overlap-efficiency and hot-hit-rate columns in range, and the
+    prefetch scheduler recovering ≥2× on the recorded sparse-frontier
+    slice somewhere in the table."""
+    oc = baseline["oocore"]
+    assert oc["algorithm"] == "sssp_bf"  # min monoid → bit-identity holds
+    rows = oc["budgets"]
+    assert len(rows) >= 2
+    for row in rows:
+        assert row["hbm_budget"] < oc["column_bytes_per_device"]
+        assert row["fits_resident"] is False
+        assert row["bit_identical"] is True
+        assert row["super_shards"] >= 2
+        per = row["per_iter_s"]
+        assert all(per[a] > 0 for a in ("resident", "oocore_prefetch",
+                                        "oocore_no_prefetch"))
+        assert 0.0 <= row["overlap_efficiency"] <= 1.0
+        assert 0.0 <= row["hot_hit_rate"] <= 1.0
+        # derived data: the speedup is the ratio of the recorded means
+        assert row["prefetch_speedup"] == pytest.approx(
+            per["oocore_no_prefetch"] / per["oocore_prefetch"], rel=1e-6)
+        sl = row["sparse_slice"]
+        assert sl["count"] >= 1 and sl["prefetch_speedup"] > 0
+        assert len(sl["iterations"]) == 2
+    assert oc["best_sparse_speedup"] >= 2.0
+    assert oc["best_sparse_speedup"] == pytest.approx(
+        max(r["sparse_slice"]["prefetch_speedup"] for r in rows), rel=1e-9)
+
+
+def test_baseline_compressed_wire_rows(baseline):
+    """The sync-wire measurement: both sum-monoid workloads, byte
+    accounting showing real volume reduction (int8 wire strictly below
+    the float32 exact wire, ratio consistent), and finite accuracy
+    numbers — errors are expected (int8 quantization) but must be
+    recorded, not hidden."""
+    import math
+
+    cw = baseline["compressed_wire"]
+    assert set(cw) == {"pagerank", "label_prop"}
+    for row in cw.values():
+        assert 0 < row["compressed_bytes"] < row["exact_bytes"]
+        assert row["volume_ratio"] == pytest.approx(
+            row["compressed_bytes"] / row["exact_bytes"], rel=1e-9)
+        assert math.isfinite(row["max_abs_err"])
+        assert 0.0 <= row["mean_abs_err"] <= row["max_abs_err"]
+        assert all(v > 0 for v in row["per_iter_s"].values())
+
+
 # -- serving artifact schema -------------------------------------------------
 def test_serve_baseline_batch_sweep_covers_every_cell(serve_baseline):
     """Every query-kind × batch-size cell, ≥3 kinds × ≥2 sizes, each

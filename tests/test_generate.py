@@ -1,0 +1,88 @@
+"""The streaming R-MAT generator: determinism, distribution, memory.
+
+``rmat_stream`` exists so the out-of-core benchmarks can build >10⁷-edge
+inputs; the memory-regression test pins its defining property — peak
+host allocation stays at edge-list scale (~12 B/edge plus one fixed
+chunk of scratch), never the level-major generator's int64 working set
+and never a dense adjacency.
+"""
+from __future__ import annotations
+
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.graph import generate
+
+
+def test_rmat_stream_deterministic_in_seed():
+    a = generate.rmat_stream(1 << 12, 50_000, seed=3)
+    b = generate.rmat_stream(1 << 12, 50_000, seed=3)
+    np.testing.assert_array_equal(a.src, b.src)
+    np.testing.assert_array_equal(a.dst, b.dst)
+    np.testing.assert_array_equal(a.weights, b.weights)
+    c = generate.rmat_stream(1 << 12, 50_000, seed=4)
+    assert not np.array_equal(a.src, c.src)
+
+
+def test_rmat_stream_shapes_and_dtypes():
+    g = generate.rmat_stream(1000, 12_345, seed=0)
+    assert g.num_vertices == 1000
+    assert g.src.shape == g.dst.shape == g.weights.shape == (12_345,)
+    assert g.src.dtype == np.int32 and g.dst.dtype == np.int32
+    assert g.weights.dtype == np.float32
+    assert g.src.min() >= 0 and g.src.max() < 1000
+    assert g.dst.min() >= 0 and g.dst.max() < 1000
+    assert (g.weights >= 1.0).all() and (g.weights < 10.0).all()
+    unweighted = generate.rmat_stream(1000, 500, seed=0, weighted=False)
+    assert unweighted.weights is None
+
+
+def test_rmat_stream_power_law_degrees():
+    g = generate.rmat_stream(1 << 12, 200_000, seed=1)
+    deg = np.bincount(g.src, minlength=g.num_vertices)
+    # R-MAT skew: the hottest vertex far exceeds the mean out-degree
+    assert deg.max() > 20 * deg.mean()
+
+
+def test_rmat_stream_registered():
+    assert "rmat_stream" in generate.GENERATORS
+    g = generate.by_name("rmat_stream", 512, 1000, seed=0)
+    assert g.src.shape == (1000,)
+
+
+def test_rmat_stream_memory_regression_at_1e6_edges():
+    """Peak allocation at 10⁶ edges stays edge-list-native.
+
+    Final arrays are 12 B/edge (two int32 + one float32); the bound
+    allows 2.5× that plus ~6 MB for one generation chunk of scratch.  A
+    regression to the level-major int64 pipeline (~32 B/edge peak) or
+    to any dense-adjacency construction fails it immediately.
+    """
+    edges = 1_000_000
+    tracemalloc.start()
+    try:
+        g = generate.rmat_stream(1 << 17, edges, seed=0)
+        _, peak = tracemalloc.get_traced_memory()
+    finally:
+        tracemalloc.stop()
+    assert g.src.shape == (edges,)
+    final_bytes = g.src.nbytes + g.dst.nbytes + g.weights.nbytes
+    assert final_bytes == 12 * edges
+    assert peak < 2.5 * final_bytes + 6 * 2**20, (
+        f"peak {peak/2**20:.1f} MiB — rmat_stream must stay edge-list-native")
+
+
+def test_rmat_stream_matches_rmat_distribution_family():
+    """Same R-MAT recursion: the streamed variant's degree skew tracks
+    the level-major generator's on the same parameters (not bit-equal —
+    different RNG consumption order by design)."""
+    n, e = 1 << 11, 60_000
+    a = generate.rmat(n, e, seed=5, dedup=False)
+    b = generate.rmat_stream(n, e, seed=5)
+    da = np.sort(np.bincount(a.src, minlength=n))[::-1]
+    db = np.sort(np.bincount(b.src, minlength=n))[::-1]
+    # top-1% mass within 2× of each other — both heavy-tailed
+    k = n // 100
+    assert 0.5 < da[:k].sum() / db[:k].sum() < 2.0

@@ -1,0 +1,272 @@
+"""Out-of-core execution: super-shard planning, bit-identity, prefetch.
+
+The contract under test (DESIGN.md §6): an out-of-core run — ANY
+super-shard count, ANY hot-set budget including budget≈0 (pure
+streaming) and budget=all (pure resident cache) — produces the same
+state trajectory as the all-resident fused run, *bit-identically* for
+idempotent monoids, prefetch on or off, and across a mid-run device
+kill.  The planner tests pin the budget arithmetic, including the
+migration re-plan: a smaller survivor mesh raises the per-device cost
+of a column, so the same budget must buy a finer super-shard split.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import numpy as np
+import pytest
+
+from repro import plug
+from repro.dist import fault as dist_fault
+from repro.graph import generate
+from repro.graph.algorithms import label_prop, pagerank, sssp_bf
+from repro.graph.compaction import (build_csr_tiles, take_tiles,
+                                    tile_access_scores)
+from repro.graph.partition import super_shard_cuts
+from repro.oocore import OocoreConfig, plan_super_shards
+
+SHARDS = 8
+OPTS = plug.PlugOptions(block_size=128)
+
+
+def _mw(g, prog, *, oocore=None, kernel="reference", **kw):
+    daemon = ("sharded" if kernel == "reference"
+              else plug.get_daemon("sharded", kernel=kernel))
+    return plug.Middleware(g, prog, daemon=daemon, upper="mesh",
+                           num_shards=SHARDS, oocore=oocore,
+                           options=OPTS, **kw)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return generate.rmat(512, 4096, seed=7)
+
+
+@pytest.fixture(scope="module")
+def resident_sssp(graph):
+    return _mw(graph, sssp_bf(graph)).run(max_iterations=12)
+
+
+# -- planner ----------------------------------------------------------------
+def test_config_validation():
+    with pytest.raises(ValueError):
+        OocoreConfig()  # neither budget nor explicit count
+    with pytest.raises(ValueError):
+        OocoreConfig(hbm_budget=1 << 20, num_super_shards=2)  # both
+    with pytest.raises(ValueError):
+        OocoreConfig(hbm_budget=1 << 20, hot_fraction=1.5)
+
+
+def test_plan_budget_arithmetic():
+    cfg = OocoreConfig(hbm_budget=800, hot_fraction=0.5)
+    plan = plan_super_shards(num_cols=100, col_bytes_dev=10, config=cfg)
+    # hot set: 50% of the budget buys 40 of the 100 columns; the other
+    # 400 bytes hold two 20-column double-buffer slots
+    assert plan.hot_cols == 40
+    assert plan.cols_per_super_shard == 20
+    assert plan.num_super_shards == 3
+    assert plan.fits_resident is False
+    assert plan.resident_bytes_dev <= 800
+    # every cold column is covered
+    assert plan.num_super_shards * plan.cols_per_super_shard >= plan.cold_cols
+
+
+def test_plan_budget_zero_hot_and_budget_all():
+    # budget=0 hot fraction → pure streaming, one-column super-shards at
+    # the degenerate minimum budget
+    tight = plan_super_shards(100, 10, OocoreConfig(hbm_budget=0,
+                                                    hot_fraction=0.0))
+    assert tight.hot_cols == 0 and tight.cols_per_super_shard == 1
+    assert tight.num_super_shards == 100
+    # budget=all → everything is hot, nothing streams
+    full = plan_super_shards(100, 10, OocoreConfig(hbm_budget=10_000,
+                                                   hot_fraction=1.0))
+    assert full.hot_cols == 100 and full.num_super_shards == 0
+    assert full.fits_resident is True
+
+
+def test_oocore_replan_smaller_mesh_finer_split():
+    """The migration half: after an 8→4 kill each survivor holds twice
+    the shards, so a column costs twice the device bytes and the same
+    budget must stream in smaller super-shards (more of them)."""
+    cfg = OocoreConfig(hbm_budget=4096, hot_fraction=0.25)
+    before = dist_fault.oocore_replan(64, 16, 8, 8, cfg)
+    after = dist_fault.oocore_replan(64, 16, 8, 4, cfg)
+    assert after.col_bytes_dev == 2 * before.col_bytes_dev
+    assert after.num_super_shards > before.num_super_shards
+    assert after.hot_cols < before.hot_cols
+    with pytest.raises(ValueError):
+        dist_fault.oocore_replan(64, 16, 8, 3, cfg)  # non-divisor mesh
+
+
+def test_super_shard_cuts_tile_aligned():
+    hot, cold = super_shard_cuts(10, 4, 2)
+    assert hot == slice(0, 4)
+    assert cold == [slice(4, 6), slice(6, 8), slice(8, 10)]
+    hot, cold = super_shard_cuts(10, 10, 0)  # all hot
+    assert cold == []
+    with pytest.raises(ValueError):
+        super_shard_cuts(10, 11, 2)
+
+
+def test_tile_access_scores_and_take_tiles(graph):
+    ts = build_csr_tiles(graph.src, graph.dst, graph.weights,
+                         graph.num_vertices, edge_tile=256)
+    deg = np.bincount(graph.src, minlength=graph.num_vertices)
+    scores = tile_access_scores(ts.gsrc, ts.emask, deg)
+    assert scores.shape == (ts.num_tiles,)
+    assert (scores >= 0).all() and scores.sum() > 0
+    order = np.argsort(-scores, kind="stable")
+    re = take_tiles(ts, order)
+    # a whole-tile permutation moves edges around but loses none
+    assert re.emask.sum() == ts.emask.sum()
+    assert re.num_tiles == ts.num_tiles
+    np.testing.assert_array_equal(np.sort(re.gsrc[re.emask]),
+                                  np.sort(ts.gsrc[ts.emask]))
+
+
+# -- bit-identity vs the all-resident fused run -----------------------------
+@pytest.mark.parametrize("hot_fraction,num_ss,prefetch", [
+    (0.0, 2, True),    # pure streaming, double-buffered
+    (0.0, 3, False),   # pure streaming, serialized baseline
+    (0.5, 2, False),   # cache + stream
+    (0.5, 3, True),
+    (1.0, 1, True),    # budget=all: cache only, nothing streams
+])
+def test_bit_identity_matrix(graph, resident_sssp, hot_fraction, num_ss,
+                             prefetch):
+    cfg = OocoreConfig(num_super_shards=num_ss, hot_fraction=hot_fraction,
+                       prefetch=prefetch)
+    r = _mw(graph, sssp_bf(graph), oocore=cfg).run(max_iterations=12)
+    np.testing.assert_array_equal(r.state, resident_sssp.state)
+    assert r.iterations == resident_sssp.iterations
+    assert r.converged == resident_sssp.converged
+
+
+def test_bit_identity_under_byte_budget(graph, resident_sssp):
+    """A graph larger than the configured HBM budget completes and
+    matches: the budget covers only a third of the column bytes."""
+    probe = _mw(graph, sssp_bf(graph))
+    total_dev = (sum(x.nbytes for x in jax.tree.leaves(probe.daemon.stacked))
+                 // probe.daemon.m)
+    cfg = OocoreConfig(hbm_budget=total_dev // 3, hot_fraction=0.25)
+    mw = _mw(graph, sssp_bf(graph), oocore=cfg)
+    assert mw.daemon.oocore_plan.fits_resident is False
+    r = mw.run(max_iterations=12)
+    np.testing.assert_array_equal(r.state, resident_sssp.state)
+
+
+def test_prefetch_schedule_deterministic(graph):
+    """Prefetch is a performance overlay, not a schedule change: two
+    prefetching runs and a serialized run all produce identical bits."""
+    mk = lambda pf: _mw(graph, sssp_bf(graph),
+                        oocore=OocoreConfig(num_super_shards=3,
+                                            hot_fraction=0.3,
+                                            prefetch=pf)).run(max_iterations=12)
+    a, b, c = mk(True), mk(True), mk(False)
+    np.testing.assert_array_equal(a.state, b.state)
+    np.testing.assert_array_equal(a.state, c.state)
+
+
+def test_sum_monoid_matches_to_float_tolerance(graph):
+    """SUM is not idempotent — group-wise accumulation may reassociate
+    floats — so PageRank/LabelProp promise tolerance, not bits."""
+    for prog in (pagerank(graph), label_prop(graph)):
+        ref = _mw(graph, prog).run(max_iterations=5)
+        r = _mw(graph, prog,
+                oocore=OocoreConfig(num_super_shards=3,
+                                    hot_fraction=0.25)).run(max_iterations=5)
+        np.testing.assert_allclose(r.state, ref.state, rtol=1e-5, atol=1e-6)
+
+
+def test_pallas_kernel_streams_csr_tiles(graph, resident_sssp):
+    """kernel="pallas" streams stacked CSR tiles instead of block
+    tensors — same cuts-at-tile-boundaries contract, same bits."""
+    cfg = OocoreConfig(num_super_shards=2, hot_fraction=0.5)
+    r = _mw(graph, sssp_bf(graph), oocore=cfg,
+            kernel="pallas").run(max_iterations=12)
+    np.testing.assert_array_equal(r.state, resident_sssp.state)
+
+
+def test_bit_identity_across_midrun_kill(graph, resident_sssp):
+    """A device killed mid-run re-plans super-shard ownership for the
+    survivor mesh and the answer still matches the uninterrupted
+    all-resident run bit-for-bit."""
+    cfg = OocoreConfig(num_super_shards=3, hot_fraction=0.3)
+    mw = _mw(graph, sssp_bf(graph), oocore=cfg,
+             failures=plug.FailureSchedule(kills=[(3, 2)]))
+    bytes_before = mw.daemon.oocore_plan.col_bytes_dev
+    r = mw.run(max_iterations=12)
+    np.testing.assert_array_equal(r.state, resident_sssp.state)
+    migs = [rec["migration"] for rec in r.per_iteration
+            if "migration" in rec]
+    assert len(migs) == 1
+    # survivors hold more shards → per-device column cost re-planned up
+    assert mw.daemon.oocore_plan.col_bytes_dev == 2 * bytes_before
+    assert mw.daemon.m == 4
+
+
+# -- stats surface ----------------------------------------------------------
+def test_hit_miss_and_overlap_counters(graph):
+    cfg = OocoreConfig(num_super_shards=2, hot_fraction=0.5)
+    mw = _mw(graph, pagerank(graph), oocore=cfg)
+    r = mw.run(max_iterations=4)
+    st = mw.oocore_stats
+    assert st["iterations"] == r.iterations
+    assert st["hot_hits"] > 0 and st["cold_misses"] > 0
+    assert 0.0 < st["hot_hit_rate"] < 1.0
+    assert 0.0 <= st["overlap_efficiency"] <= 1.0
+    assert st["uploads"] == st["iterations"] * mw.daemon.num_super_shards
+    assert st["upload_bytes"] == st["uploads"] * mw.daemon.super_shard_nbytes
+    for rec in r.per_iteration:
+        oc = rec["oocore"]
+        assert 0.0 <= oc["overlap_efficiency"] <= 1.0
+        assert oc["hot_hits"] + oc["cold_misses"] == rec["blocks_run"]
+
+
+def test_frontier_skipping_counters_and_identity():
+    """On a wavefront workload (road lattice) the prefetch scheduler
+    skips cold super-shards the frontier never touches — and the skips
+    are free: the answer still matches the all-resident run bit for
+    bit.  The no-prefetch baseline has no scheduler and never skips."""
+    g = generate.grid_road(48, seed=3)
+    ref = _mw(g, sssp_bf(g)).run(max_iterations=10)
+    cfg = OocoreConfig(num_super_shards=6, hot_fraction=0.0)
+    mw = _mw(g, sssp_bf(g), oocore=cfg)
+    r = mw.run(max_iterations=10)
+    np.testing.assert_array_equal(r.state, ref.state)
+    st = mw.oocore_stats
+    assert st["skipped"] > 0
+    # every group is either taken (uploaded) or skipped, never both
+    assert (st["uploads"] + st["skipped"]
+            == st["iterations"] * mw.daemon.num_super_shards)
+    npf = _mw(g, sssp_bf(g),
+              oocore=OocoreConfig(num_super_shards=6, hot_fraction=0.0,
+                                  prefetch=False))
+    rn = npf.run(max_iterations=10)
+    np.testing.assert_array_equal(rn.state, ref.state)
+    assert npf.oocore_stats["skipped"] == 0
+
+
+def test_noprefetch_has_zero_overlap(graph):
+    cfg = OocoreConfig(num_super_shards=3, hot_fraction=0.0,
+                       prefetch=False)
+    mw = _mw(graph, pagerank(graph), oocore=cfg)
+    mw.run(max_iterations=3)
+    assert mw.oocore_stats["overlap_efficiency"] == 0.0
+    assert mw.oocore_stats["hidden_s"] == 0.0
+
+
+# -- guard rails ------------------------------------------------------------
+def test_oocore_refuses_unfused_compositions(graph):
+    cfg = OocoreConfig(num_super_shards=2)
+    with pytest.raises(ValueError, match="fused"):
+        plug.Middleware(graph, pagerank(graph), daemon="vectorized",
+                        upper="mesh", num_shards=SHARDS, oocore=cfg)
+    with pytest.raises(ValueError, match="BSP/GAS"):
+        plug.Middleware(graph, sssp_bf(graph), daemon="sharded",
+                        upper="mesh", model="async", num_shards=SHARDS,
+                        oocore=cfg)
