@@ -32,6 +32,12 @@ uninterrupted run, the migration seconds (re-plan + re-stack + state
 iteration's wall time), and whether the recovered fixed point is
 bit-identical (it must be — sssp's min monoid is idempotent).
 
+A ``dynamic`` table (DESIGN.md §7) applies add-only mutation batches of
+several sizes to a converged run and compares the incremental
+dirty-frontier restart against a cold restart — dirty must win on small
+batches for the idempotent workloads (sssp, wcc), while pagerank's sum
+monoid records the honest ``cold_fallback`` arm.
+
 ``--quick`` runs a reduced matrix and writes the ``BENCH_plug.json``
 tier-2 baseline (scripts/verify.sh --tier2).
 
@@ -380,6 +386,122 @@ def _oocore_stream_row(edges: int) -> dict:
     }
 
 
+def _dynamic_table(quick: bool) -> dict:
+    """Dynamic graphs (DESIGN.md §7): the incremental dirty-frontier
+    restart vs a cold restart across update-batch sizes.
+
+    Per cell the middleware converges to a fixed point, applies an
+    add-only edge batch (publishing a ``"mutation"`` structure epoch
+    that recuts only dirty shards), then times — post-compile, so the
+    epoch's recompile is off the clock for both arms — a full cold
+    restart and the incremental restart that resumes from the previous
+    fixed point with only the dirty frontier active.  sssp (min) and
+    wcc (min over the symmetrized graph) have idempotent monoids, so
+    the incremental restart is sound and must land bit-identical to
+    cold; pagerank (sum) records the ``cold_fallback`` arm — the epoch
+    layer still recuts tiles incrementally, but the restart cannot
+    reuse the old fixed point.  The acceptance this table guards: at
+    the smallest batch, the dirty restart beats the cold restart for
+    at least one idempotent workload (it should for both)."""
+    from repro.graph import generate
+    from repro.graph.algorithms import wcc
+    from repro.graph.mutation import MutationLog
+
+    if quick:
+        g0 = generate.rmat(300, 2_400, seed=1)
+        block = 256
+    else:
+        g0 = generate.rmat(2_000, 20_000, seed=1)
+        block = 1024
+    sizes = (8, 64, 512)
+    cap = 300
+    out = {"_meta": {"batch_sizes": list(sizes),
+                     "graph": {"num_vertices": g0.num_vertices,
+                               "num_edges": g0.num_edges}}}
+    algs = (("pagerank", pagerank, False), ("sssp_bf", sssp_bf, False),
+            ("wcc", wcc, True))
+    for name, algf, symmetric in algs:
+        # wcc's monoid is only meaningful on a symmetrized graph, and a
+        # symmetric batch must stay symmetric: add both directions
+        g = g0.with_reverse_edges() if symmetric else g0
+        rows = {}
+        for batch_size in sizes:
+            prog = algf(g)
+            mw = plug.Middleware(
+                g, prog, daemon="sharded", upper="mesh", num_shards=SHARDS,
+                options=plug.PlugOptions(block_size=block))
+            base = mw.run(max_iterations=cap)
+            prev0 = np.asarray(base.state)
+            rng = np.random.default_rng(1_000 + batch_size)
+            log = MutationLog()
+            pairs = max(1, batch_size // 2) if symmetric else batch_size
+            for _ in range(pairs):
+                s, d = (int(v) for v in rng.integers(0, g.num_vertices, 2))
+                if s == d:
+                    d = (d + 1) % g.num_vertices
+                w = float(rng.uniform(0.1, 2.0))
+                log.add_edge(s, d, w)
+                if symmetric:
+                    log.add_edge(d, s, w)
+            # applies the batch and runs once on the mutated structure:
+            # the new epoch's compile lands here, off both timed arms
+            mw.run_dynamic(log, max_iterations=cap)
+            restart = dict(mw.last_restart)
+            meta = mw.epochs.epoch.meta
+            frontier = meta["frontier"]
+
+            cold_s, it_cold, cold_state = float("inf"), 0, None
+            for _ in range(3):
+                rc = mw.run(max_iterations=cap)
+                if rc.wall_time < cold_s:
+                    cold_s, it_cold = rc.wall_time, rc.iterations
+                cold_state = np.asarray(rc.state)
+            cell = {
+                "edges_added": int(meta["edges_added"]),
+                "mode": restart["mode"],
+                "reason": restart["reason"],
+                "dirty_count": int(meta["dirty_count"]),
+                "shards_recut": int(meta["shards_recut"]),
+                "shards_clean": int(meta["shards_clean"]),
+                "mutation_apply_s": float(meta["seconds"]),
+                "cold_s": cold_s,
+                "iterations_cold": int(it_cold),
+            }
+            if restart["mode"] == "dirty":
+                def init(gr, _s=prev0, _i=prog.init):
+                    return _s, _i(gr)[1]
+
+                dirty_s, it_dirty, dirty_state = float("inf"), 0, None
+                for _ in range(3):
+                    rd = mw.run(max_iterations=cap, init=init,
+                                frontier=frontier)
+                    if rd.wall_time < dirty_s:
+                        dirty_s, it_dirty = rd.wall_time, rd.iterations
+                    dirty_state = np.asarray(rd.state)
+                cell.update({
+                    "dirty_s": dirty_s,
+                    "iterations_dirty": int(it_dirty),
+                    "speedup": cold_s / dirty_s,
+                    "bit_identical": bool(
+                        np.array_equal(dirty_state, cold_state)),
+                })
+            else:
+                cell.update({"dirty_s": None, "iterations_dirty": None,
+                             "speedup": None, "bit_identical": None})
+            rows[f"b{batch_size}"] = cell
+        out[name] = rows
+    small = f"b{min(sizes)}"
+    winners = [name for name, _, _ in algs
+               if (out[name][small].get("speedup") or 0.0) > 1.0]
+    if not winners:
+        raise RuntimeError(
+            "dynamic table: no idempotent workload's dirty restart beat "
+            f"its cold restart at the smallest batch ({small}); refusing "
+            "to record it as a baseline")
+    out["_meta"]["smallest_batch_winners"] = winners
+    return out
+
+
 def _compressed_wire_row(g, *, block: int, iters: int) -> dict:
     """``MeshUpperSystem(wire="compressed")`` accuracy and volume on the
     sum-monoid workloads (the int8 error-feedback sync wire only admits
@@ -472,6 +594,7 @@ def run(small: bool = True, quick: bool = False,
     out["compressed_wire"] = _compressed_wire_row(
         g, block=256 if quick else 1024,
         iters=iters["pagerank"] + 2)
+    out["dynamic"] = _dynamic_table(quick)
     # the autotune sweeps the pallas cells triggered above: chosen config
     # + the full per-config timing table, per (shape, monoid) signature —
     # auditable from BENCH_plug.json, not just the winning label
@@ -525,6 +648,22 @@ def main():
               f"{s['generate_s']:.1f}s, pagerank "
               f"{s['per_iter_s']:.2f}s/iter over {s['super_shards']} "
               f"super-shards, hot hit rate {s['hot_hit_rate']:.2f}")
+    dy = results.pop("dynamic")
+    for alg in ("pagerank", "sssp_bf", "wcc"):
+        cells = []
+        for bkey, c in dy[alg].items():
+            if c["mode"] == "dirty":
+                cells.append(
+                    f"{bkey} dirty={c['dirty_s']*1e3:.0f}ms "
+                    f"cold={c['cold_s']*1e3:.0f}ms "
+                    f"({c['speedup']:.1f}x, "
+                    f"{c['iterations_dirty']}/{c['iterations_cold']} its, "
+                    f"bit-identical={c['bit_identical']})")
+            else:
+                cells.append(f"{bkey} {c['mode']} "
+                             f"cold={c['cold_s']*1e3:.0f}ms "
+                             f"({c['iterations_cold']} its)")
+        print(f"dynamic ({alg}): " + "  ".join(cells))
     cw = results.pop("compressed_wire")
     for alg, row in cw.items():
         print(f"compressed-wire ({alg}): "

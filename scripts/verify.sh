@@ -24,6 +24,13 @@
 # generator's memory regression — for quick iteration on src/repro/
 # oocore/, the daemon's bind_super_shards path, and graph/generate.py.
 #
+# Fast mutation slice (scripts/verify.sh --mutate): the dynamic-graph
+# surface — the structure-epoch bus and its five rebuild triggers, the
+# rebuild-path-equivalence matrix, the mutation log/apply/dirty-recut
+# battery, incremental-vs-cold restarts, mid-run MutationSchedule rows,
+# and the shared pow2 arithmetic — for quick iteration on plug/epoch.py,
+# graph/mutation.py, core/pow2.py, and the middleware's mutation path.
+#
 # Tier-2 (scripts/verify.sh --tier2): one production dry-run slice
 # (1 arch × 1 shape × both meshes, compiled on 512 fake devices) plus the
 # acceleration benchmark on the repro.plug API — including the
@@ -32,7 +39,9 @@
 # kill-at-iteration-k elastic recovery row (iterations-to-reconverge,
 # migration seconds, fixed-point bit-identity), the out-of-core table
 # (resident vs streamed super-shards vs no-prefetch at several HBM
-# budgets), and the compressed sync-wire accuracy/volume rows — which
+# budgets), the compressed sync-wire accuracy/volume rows, and the
+# dynamic-graph table (incremental dirty-frontier restart vs cold across
+# update-batch sizes) — which
 # records the BENCH_plug.json baseline under results/benchmarks/ so the
 # perf trajectory of the fused drive loop is tracked PR over PR.
 set -euo pipefail
@@ -57,6 +66,12 @@ fi
 if [[ "${1:-}" == "--oocore" ]]; then
     shift
     exec python -m pytest -q tests/test_oocore.py tests/test_generate.py "$@"
+fi
+
+if [[ "${1:-}" == "--mutate" ]]; then
+    shift
+    exec python -m pytest -q tests/test_epoch.py tests/test_mutation.py \
+        tests/test_pow2.py "$@"
 fi
 
 if [[ "${1:-}" == "--tier2" ]]; then

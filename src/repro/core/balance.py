@@ -77,10 +77,16 @@ class CapacityEstimator:
     it observes (entities_processed, seconds) per node per iteration and
     keeps an EMA. Stragglers surface as rising c_j and get rebalanced away
     by Lemma 2 (see dist/fault.py).
+
+    ``epoch`` keys the samples to one structure epoch (plug/epoch.py):
+    a rebuild changes what an entity costs on a node, so the middleware
+    replaces the estimator — never mixes windows — whenever the epoch
+    advances.
     """
 
     num_nodes: int
     ema: float = 0.5
+    epoch: int = 0
     _c: np.ndarray | None = None
 
     def update(self, node: int, entities: float, seconds: float) -> None:

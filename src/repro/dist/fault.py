@@ -240,10 +240,47 @@ class FleetMonitor:
                        for _ in range(num_hosts)]
         self._failed = np.zeros(num_hosts, dtype=bool)
         self._acked_fractions: np.ndarray | None = None
+        self.epoch = 0  # structure epoch the current windows belong to
 
     # -- ingestion ---------------------------------------------------------
     def record(self, host: int, seconds: float) -> None:
         self._times[host].append(float(seconds))
+
+    def on_epoch(self, version: int) -> None:
+        """Keys the step-time windows to a structure epoch.
+
+        A rebuild — ANY rebuild: kill, join, rebalance, oocore re-plan,
+        mutation batch — changes what one iteration costs (different
+        shards per device, different tile counts, different streamed
+        bytes), so samples recorded under the old structure say nothing
+        about the new one.  On an epoch change every window is dropped
+        structurally, exactly as ``mark_failed`` drops a dead host's
+        samples: no later consumer can mix pre-rebuild step times into
+        post-rebuild capacity estimates.  Failure flags survive (a dead
+        device stays dead across a rebuild it did not cause).
+
+        Each window collapses to ONE synthetic sample — its pre-rebuild
+        windowed mean — rather than emptying outright: per-sample
+        history under the old structure is stale, but a host's slowness
+        *relative to the fleet* is hardware, and forgetting it would
+        blind ``stragglers()`` until every host re-reports (a lone
+        reporter is its own median).  The *acknowledged baseline* is
+        snapshotted from the full old windows first: the placement that
+        triggered this epoch was planned against exactly that view, so
+        post-rebuild drift is measured as fresh samples vs that
+        snapshot — a straggler that keeps the same slowness does not
+        re-trigger, one that keeps degrading does.
+        """
+        version = int(version)
+        if version == self.epoch:
+            return
+        self._acked_fractions = self.batch_fractions()
+        for d in self._times:
+            if d:
+                mean = float(np.mean(d))
+                d.clear()
+                d.append(mean)
+        self.epoch = version
 
     def mark_failed(self, host: int) -> None:
         """Marks the host dead AND drops its recorded step-time window:
@@ -324,8 +361,11 @@ class FleetMonitor:
 
     def capacity_drift(self) -> float:
         """Max relative per-host change of the Lemma-2 fractions vs the
-        acknowledged baseline; 0.0 before any ``ack_capacity``."""
-        if self._acked_fractions is None:
+        acknowledged baseline; 0.0 before any ``ack_capacity`` and 0.0
+        while no live host has reported under the current epoch (empty
+        windows read as uniform — that is absence of evidence, not a
+        capacity shift)."""
+        if self._acked_fractions is None or not self.observed:
             return 0.0
         cur = self.batch_fractions()
         base = self._acked_fractions

@@ -51,13 +51,26 @@ stays device-resident, and cold super-shards stream onto the mesh
 behind compute via a double-buffered prefetch thread.  Bit-identical to
 the all-resident run for idempotent monoids, at graph sizes HBM alone
 could not hold.
+
+Dynamic graphs (DESIGN.md §7): every structure rebuild — kill, join,
+rebalance, out-of-core re-plan, and now graph *mutation* — is one
+versioned event on the middleware's :class:`StructureEpochBus`.  Build
+a :class:`MutationLog` (batched edge/vertex adds/removes), apply it
+with ``mw.apply_mutations(log)`` or ``mw.run_dynamic(log)`` — the
+latter restarts incrementally from the previous fixed point with only
+the dirty frontier active when the monoid is idempotent and the batch
+only adds — or inject batches mid-run with
+``mutations=MutationSchedule(events=[(k, log)])``.
 """
 from repro.dist.fault import FailureSchedule, FleetMonitor
+from repro.graph.mutation import (MutationBatch, MutationLog,
+                                  MutationSchedule)
 from repro.plug.computation import (BSP, GAS, AsyncModel, get_model,
                                     model_names, register_model)
 from repro.plug.daemons import (BlockedDaemon, NaiveDaemon, PipelinedDaemon,
                                 ShardedDaemon, VectorizedDaemon,
                                 daemon_names, get_daemon, register_daemon)
+from repro.plug.epoch import StructureEpoch, StructureEpochBus
 from repro.plug.middleware import (AsyncDriveLoop, DriveLoop, HostDriveLoop,
                                    Middleware, OocoreDriveLoop, make_apply_fn)
 from repro.oocore import OocoreConfig
@@ -77,9 +90,11 @@ __all__ = [
     "ComputationModel", "Daemon", "DevicePartialUpper", "DriveLoop",
     "ElasticUpper", "FailureSchedule", "FleetMonitor", "HostDriveLoop",
     "HostUpperSystem", "MeshUpperSystem", "Middleware",
+    "MutationBatch", "MutationLog", "MutationSchedule",
     "NaiveDaemon", "OocoreConfig", "OocoreDriveLoop", "OutOfCoreCapable",
     "PipelinedDaemon", "PlugOptions", "PriorityAsyncModel",
-    "Result", "ShardCapableDaemon", "ShardedDaemon", "UpperSystem",
+    "Result", "ShardCapableDaemon", "ShardedDaemon",
+    "StructureEpoch", "StructureEpochBus", "UpperSystem",
     "VectorizedDaemon", "daemon_names", "get_daemon", "get_model",
     "get_upper_system", "make_apply_fn", "model_names", "register_daemon",
     "register_model", "register_upper_system", "run_reference",

@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.core import pipeline as pl
 from repro.core.blocks import BlockSet
+from repro.core.pow2 import pad_pow2
 from repro.core.template import VertexProgram
 
 KERNELS = ("reference", "pallas")
@@ -140,20 +141,13 @@ def make_combine_fn(program: VertexProgram, n: int):
     return combine
 
 
-def pad_pow2(sel: np.ndarray) -> np.ndarray:
-    """Pads selected block ids to the next power of two.
-
-    The active-block count changes every iteration; padding it to a
-    power of two bounds the number of distinct ``block_fn`` shapes — and
-    hence XLA recompiles — at ``log2(num_blocks) + 1`` per shard for the
-    whole run.  Padding entries are marked -1 and killed via ``emask``
-    in :func:`gather_blocks`.
-    """
-    n = int(sel.size)
-    target = 1 << max(0, (n - 1).bit_length())
-    if target == n:
-        return sel
-    return np.concatenate([sel, np.full(target - n, -1, dtype=sel.dtype)])
+# pad_pow2 (imported above) pads selected block ids to the next power of
+# two: the active-block count changes every iteration, and padding it
+# bounds the number of distinct ``block_fn`` shapes — hence XLA
+# recompiles — at ``log2(num_blocks) + 1`` per shard for the whole run.
+# Padding entries are -1 and killed via ``emask`` in
+# :func:`gather_blocks`.  The implementation lives in
+# :mod:`repro.core.pow2`, shared with the serving layer's batch buckets.
 
 
 def gather_blocks(bs: BlockSet, sel: np.ndarray):
@@ -252,10 +246,21 @@ class VectorizedDaemon:
             "csr": {k: jnp.asarray(v) for k, v in ts.arrays().items()},
             "eblock": jnp.asarray(ts.eblock),
             "num_blocks": blockset.num_blocks,
+            "blockset": blockset,  # strong ref: id() keys must not alias
             "run": run,
         }
         self._csr_cache[key] = entry
         return entry
+
+    def prune_block_caches(self, blocksets) -> None:
+        """Drops per-blockset cache entries whose blockset is no longer
+        bound — called by the middleware's structure-epoch daemon hook
+        after a rebuild replaced some (but usually not all) blocksets.
+        Surviving blocksets keep their compiled/compacted entries: the
+        clean-tiles-untouched contract of dynamic graphs."""
+        live = {id(bs) for bs in blocksets}
+        self._csr_cache = {k: v for k, v in self._csr_cache.items()
+                           if k in live}
 
     def _run_blocks_csr(self, state, aux, blockset, sel):
         entry = self._csr_entry(blockset)
@@ -331,6 +336,13 @@ class ShardedDaemon(VectorizedDaemon):
         self.oocore_plan = None
         self.hot_stacked = None
         self.num_super_shards = 0
+        # per-blockset compacted-tileset cache: a re-bind (migration
+        # reorder, mutation with clean shards) reuses each surviving
+        # BlockSet's tiles instead of recompacting — cumulative counters
+        # are the observability seam the dynamic-graph tests pin
+        self._tile_cache: dict = {}
+        self.tiles_recut = 0
+        self.tilesets_reused = 0
 
     def share_from(self, donor: "ShardedDaemon | None"):
         """Declares a donor whose device-placed stacked block tensors
@@ -347,12 +359,15 @@ class ShardedDaemon(VectorizedDaemon):
 
     def bind(self, program: VertexProgram, num_vertices: int):
         super().bind(program, num_vertices)
-        # a rebind invalidates the stacked layout and compiled bodies
+        # a rebind invalidates the stacked layout and compiled bodies —
+        # and the tileset cache: tiles were compacted against the old
+        # program/num_vertices (segment sizes, kernel config)
         self._stacked = None
         self._partials_fns = {}
         self._super_shards = None
         self.hot_stacked = None
         self.num_super_shards = 0
+        self._tile_cache = {}
         return self
 
     @property
@@ -470,14 +485,34 @@ class ShardedDaemon(VectorizedDaemon):
         shard that dominates the step), and pinned on the daemon — a
         mid-run ``remesh`` re-stacks with the already-chosen config, so
         checkpoint-free migration never pays a re-sweep.
+
+        Compaction is cached per BlockSet object: a re-bind that keeps
+        some blocksets (migration reorder; mutation where clean shards'
+        blocks are untouched) reuses their tiles and recompacts only the
+        replaced ones (``tiles_recut`` / ``tilesets_reused`` count the
+        split).  The cache holds the blockset strongly so an ``id()``
+        key can never alias a collected object, and entries whose
+        blockset left the binding are pruned.
         """
         from repro.graph.compaction import pad_tileset, tiles_from_blockset
 
         big = max(blocksets, key=lambda bs: int(bs.emask.sum()))
         cfg = self._resolve_csr_config(*_live_edges(big))
-        tiles = [tiles_from_blockset(bs, self.n, edge_tile=cfg.edge_tile,
-                                     hub_threshold=cfg.hub_threshold)
-                 for bs in blocksets]
+        tiles = []
+        for bs in blocksets:
+            hit = self._tile_cache.get(id(bs))
+            if hit is not None and hit[0] is bs:
+                self.tilesets_reused += 1
+                tiles.append(hit[1])
+                continue
+            t = tiles_from_blockset(bs, self.n, edge_tile=cfg.edge_tile,
+                                    hub_threshold=cfg.hub_threshold)
+            self.tiles_recut += 1
+            self._tile_cache[id(bs)] = (bs, t)
+            tiles.append(t)
+        live = {id(bs) for bs in blocksets}
+        self._tile_cache = {k: v for k, v in self._tile_cache.items()
+                            if k in live}
         nt = max(t.num_tiles for t in tiles)
         rt = max(t.row_tile for t in tiles)
         st = max(t.src_tile for t in tiles)

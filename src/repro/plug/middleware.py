@@ -56,12 +56,15 @@ import numpy as np
 from repro.core import pipeline as pl
 from repro.core.balance import CapacityEstimator, lemma2_fractions
 from repro.core.blocks import build_blocks
+from repro.core.pow2 import next_pow2
 from repro.core.sync import LRUVertexCache, SyncStats, can_skip_sync
 from repro.core.template import VertexProgram
 from repro.dist import fault as dist_fault
+from repro.graph import mutation as graph_mutation
 from repro.graph.structure import EdgePartition, Graph
 from repro.plug.computation import BSP, GAS, AsyncModel, get_model
 from repro.plug.daemons import get_daemon
+from repro.plug.epoch import StructureEpoch, StructureEpochBus
 from repro.plug.protocols import (DevicePartialUpper, ElasticUpper,
                                   OutOfCoreCapable, PlugOptions,
                                   PriorityAsyncModel, Result,
@@ -162,7 +165,24 @@ class Middleware:
         deterministic kills/straggler reports into the monitor ("kill
         device d at iteration k" — the test/bench seam).  Implies a
         monitor (one is created if not given).
+      mutations: a :class:`~repro.graph.mutation.MutationSchedule`
+        injecting deterministic graph-mutation batches between fused
+        iterations ("apply batch b at iteration k") — the dynamic-graph
+        counterpart of ``failures``.  Batches land between iterations
+        through the same structure-epoch publish a migration uses; the
+        run continues incrementally (dirty frontier re-activated) when
+        the monoid is idempotent and the batch only adds, else the
+        carried state resets (cold restart mid-run).  Needs a fused
+        loop; between-run mutations go through :meth:`apply_mutations`.
       options: :class:`~repro.plug.protocols.PlugOptions`.
+
+    Every structure rebuild — kill, join, rebalance, out-of-core
+    re-plan, mutation — is published on ``self.epochs`` (a
+    :class:`~repro.plug.epoch.StructureEpochBus`); the subscribed hooks
+    re-target the upper system's collectives, re-place the daemon's
+    block tensors, and restart the capacity windows, in that order.
+    Drive loops react to the bus version between iterations and never
+    call ``remesh``/``replan`` themselves.
     """
 
     def __init__(
@@ -178,6 +198,7 @@ class Middleware:
         capacities=None,
         monitor: "dist_fault.FleetMonitor | None" = None,
         failures: "dist_fault.FailureSchedule | None" = None,
+        mutations: "graph_mutation.MutationSchedule | None" = None,
         oocore=None,
         options: PlugOptions | None = None,
     ):
@@ -260,6 +281,78 @@ class Middleware:
             # relative to this baseline
             self.monitor.ack_capacity()
 
+        # -- dynamic graphs (DESIGN.md §7) ---------------------------------
+        self.mutations = mutations
+        if mutations is not None and not self._fused:
+            raise ValueError(
+                "a mid-run MutationSchedule needs a fused device-resident "
+                "loop (the host loop re-reads the graph every iteration "
+                "and never polls for due batches); apply batches between "
+                "runs with apply_mutations() instead")
+        self.last_restart: dict | None = None
+        self._last_state: np.ndarray | None = None
+
+        # -- the structure-epoch layer (plug/epoch.py) ---------------------
+        # Every rebuild trigger publishes here; the hooks run in this
+        # order (collective mesh first, block tensors second, capacity
+        # windows last) — the chain migrate()/rebalance() used to
+        # hand-code, now shared by all five causes.
+        self.epochs = StructureEpochBus()
+        self.epochs.subscribe("upper", self._epoch_upper)
+        self.epochs.subscribe("daemon", self._epoch_daemon)
+        self.epochs.subscribe("capacity", self._epoch_capacity)
+        self.epochs.initialize(StructureEpoch(
+            version=0, cause="init",
+            mesh=self.upper.mesh if self._fused else None,
+            partitions=tuple(self.partitions),
+            blocksets=tuple(self.blocksets),
+            oocore_plan=(self.daemon.oocore_plan
+                         if self._fused_kind == "oocore" else None)))
+
+    # -- structure-epoch rebuild hooks -------------------------------------
+    def _epoch_upper(self, new: StructureEpoch, old) -> None:
+        """Re-targets the upper system at the epoch's mesh (fused) or
+        re-binds it for the new shard layout (host path)."""
+        if self._fused:
+            self.upper.remesh(new.mesh)
+        else:
+            self.upper.bind(self.program, self.num_shards)
+
+    def _epoch_daemon(self, new: StructureEpoch, old) -> None:
+        """Re-places the daemon's block tensors for the epoch.  In
+        out-of-core mode the daemon's re-plan fills ``new.oocore_plan``
+        — the plan is an output of the rebuild, not an input to it.  On
+        the host path there is nothing to re-place (blocks upload per
+        iteration); stale per-blockset caches are pruned instead."""
+        if self._fused:
+            cfg = new.meta.get("oocore_config")
+            if cfg is not None:
+                # explicit re-plan under a NEW budget (oocore_replan());
+                # remesh would re-bind under the old stored config
+                self.daemon.bind_super_shards(
+                    list(new.blocksets), mesh=new.mesh,
+                    axis=self.upper.axis, config=cfg)
+            else:
+                self.daemon.remesh(new.mesh, blocksets=list(new.blocksets))
+            if self._fused_kind == "oocore":
+                new.oocore_plan = self.daemon.oocore_plan
+        else:
+            prune = getattr(self.daemon, "prune_block_caches", None)
+            if prune is not None:
+                prune(new.blocksets)
+
+    def _epoch_capacity(self, new: StructureEpoch, old) -> None:
+        """Restarts capacity estimation under the new epoch: per-shard
+        costs measured against the old structure say nothing about the
+        new one (different shards per device, different tile counts), so
+        the estimator is replaced and the fleet monitor's step-time
+        windows are re-keyed (``FleetMonitor.on_epoch`` snapshots the
+        acked baseline before dropping the samples)."""
+        self._estimator = CapacityEstimator(self.num_shards,
+                                            epoch=new.version)
+        if self.monitor is not None:
+            self.monitor.on_epoch(new.version)
+
     # -- setup ------------------------------------------------------------
     def _resolve_block_size(self) -> int:
         o = self.options
@@ -327,7 +420,7 @@ class Middleware:
 
     # -- the drive loop ---------------------------------------------------
     def run(self, max_iterations: int | None = None, *,
-            init=None) -> Result:
+            init=None, frontier=None) -> Result:
         """Drives the program to convergence.
 
         ``init`` overrides ``program.init`` for this run only — the
@@ -335,6 +428,11 @@ class Middleware:
         is reused across batches whose seeds/restart vectors enter as
         *data* (``init(graph) -> (state0, aux)``, same shapes), so no
         step is ever re-jitted per request batch.
+
+        ``frontier`` overrides the initial active mask (default: every
+        vertex) — the incremental-restart seam: :meth:`run_dynamic`
+        resumes from the previous fixed point with only the mutation's
+        dirty frontier active.
         """
         # Fresh per-run accounting: stats and LRU caches reset at loop
         # entry (regression: a second run() on the same instance reported
@@ -349,7 +447,61 @@ class Middleware:
             loops = {"bsp": DriveLoop, "async": AsyncDriveLoop,
                      "oocore": OocoreDriveLoop, None: HostDriveLoop}
             self._loop = loops[self._fused_kind](self)
-        return self._loop.run(max_iterations, init=init)
+        res = self._loop.run(max_iterations, init=init, frontier=frontier)
+        # the previous fixed point the next run_dynamic() may resume from
+        self._last_state = np.asarray(res.state)
+        return res
+
+    # -- between-iteration structure polling -------------------------------
+    def _poll_structure(self, it: int) -> dict:
+        """The between-iteration poll of the fused drive loops: feeds
+        due failure-schedule events and due mutation batches through
+        their structure-epoch publishers.  Returns the extra entries for
+        the iteration record ({} when nothing fired) — the loop reacts
+        to the bus *version*, never to this dict, so externally
+        triggered publishes (a direct ``migrate()`` call from another
+        middleware sharing the monitor) are adopted identically."""
+        out: dict = {}
+        if self.monitor is not None:
+            mig = self._poll_faults(it)
+            if mig is not None:
+                out["migration"] = mig
+        mut = self._poll_mutations(it)
+        if mut is not None:
+            out["mutation"] = mut
+        return out
+
+    def _poll_mutations(self, it: int) -> dict | None:
+        """Applies the mutation batches due at iteration ``it``.  Each
+        batch publishes its own epoch; when several are due at once the
+        final epoch's meta is widened (frontier union, incremental AND)
+        so the loop's single adoption of the latest version loses
+        nothing."""
+        if self.mutations is None:
+            return None
+        due = self.mutations.due_at(it)
+        if not due:
+            return None
+        t0 = time.perf_counter()
+        eps = [self.apply_mutations(b) for b in due]
+        # an all-empty batch publishes nothing and returns the current
+        # epoch, whose meta carries no frontier — drop it
+        eps = [e for e in eps if e.meta.get("frontier") is not None]
+        if not eps:
+            return None
+        ep = eps[-1]
+        for e in eps[:-1]:
+            ep.meta["frontier"] = ep.meta["frontier"] | e.meta["frontier"]
+            ep.meta["incremental"] = (ep.meta["incremental"]
+                                      and e.meta["incremental"])
+        return {
+            "batches": len(due),
+            "edges_added": sum(e.meta["edges_added"] for e in eps),
+            "edges_removed": sum(e.meta["edges_removed"] for e in eps),
+            "dirty_vertices": int(sum(e.meta["dirty_count"] for e in eps)),
+            "incremental": bool(ep.meta["incremental"]),
+            "seconds": time.perf_counter() - t0,
+        }
 
     # -- elastic fault tolerance ------------------------------------------
     def _poll_faults(self, it: int) -> dict | None:
@@ -441,20 +593,22 @@ class Middleware:
            caller-supplied partitions — the existing partitions are
            kept and merely re-ordered onto their new devices
            (bit-identical block math, different placement);
-        4. the upper system re-targets its collectives
-           (:meth:`~repro.plug.uppers.MeshUpperSystem.remesh`), the
-           daemon re-stacks its block tensors for the smaller axis
+        4. the rebuild is *published* as a structure epoch (cause
+           ``"kill"``/``"join"``/``"rebalance"``): the subscribed hooks
+           re-target the upper system's collectives
+           (:meth:`~repro.plug.uppers.MeshUpperSystem.remesh`),
+           re-stack the daemon's block tensors
            (:meth:`~repro.plug.daemons.ShardedDaemon.remesh`), and
-           busy-time samples recorded under the old placement are
-           dropped (the capacity estimator restarts — stale costs,
-           possibly measured on now-dead devices, must not leak into a
-           later :meth:`rebalance`).
+           restart capacity estimation under the new epoch — stale
+           costs, possibly measured on now-dead devices, must not leak
+           into a later :meth:`rebalance`.
 
-        The fused drive loop, which calls this via :meth:`_poll_faults`,
-        then ``device_put``s the carried vertex state onto the survivor
-        mesh and rebuilds its jitted step for the new axis size — no
-        checkpoint is ever restored.  Also callable directly after
-        ``monitor.mark_failed(...)`` for externally detected failures.
+        The fused drive loop notices the epoch version change at its
+        next between-iteration poll, ``device_put``s the carried vertex
+        state onto the survivor mesh, and rebuilds its jitted step for
+        the new axis size — no checkpoint is ever restored.  Also
+        callable directly after ``monitor.mark_failed(...)`` for
+        externally detected failures.
         """
         t0 = time.perf_counter()
         mon = self.monitor
@@ -473,6 +627,8 @@ class Middleware:
         cap = self.num_shards // m_new
         assign = dist_fault.reassign_shards(self.num_shards, frac, cap=cap)
         perm = np.argsort(assign, kind="stable")  # device-major slot order
+        m_old = len(self._mesh_device_ids)
+        cap_old = self.num_shards // max(1, m_old)
         repartitioned = self._owns_partitions and mon.observed
         if repartitioned:
             # capacity-aware re-partition: device chosen[i] holds `cap`
@@ -480,20 +636,36 @@ class Middleware:
             slot_frac = np.repeat(frac / cap, cap)
             self.partitions = list(self.upper.partition(
                 self.graph, self.num_shards, fractions=slot_frac))
+            self._setup_blocks()
+            dirty = None  # arbitrary edges changed shards: no vertex clean
         else:
+            # Pure re-placement.  The dirty region is exact: a vertex's
+            # merged value depends only on the device *grouping* of the
+            # shards holding its in-edges, so when the axis length is
+            # unchanged only the destinations of shards that moved device
+            # are affected; a changed axis length re-reduces everything.
+            if m_new != m_old:
+                dirty = None
+            else:
+                moved = [int(perm[s]) for s in range(self.num_shards)
+                         if (self._mesh_device_ids[int(perm[s]) // cap_old]
+                             != chosen[s // cap])]
+                dirty = (np.empty(0, np.int64) if not moved
+                         else np.unique(np.concatenate(
+                             [self.partitions[j].dst for j in moved]
+                         ).astype(np.int64)))
             self.partitions = [self.partitions[int(i)] for i in perm]
-        self._setup_blocks()
+            # reorder, don't rebuild: build_blocks is deterministic per
+            # partition and the pinned block/vblock sizes are maxima over
+            # the same (reordered) set — bit-identical blocks, and the
+            # preserved BlockSet identities keep the daemon's host-side
+            # tile caches warm across the migration
+            self.blocksets = [self.blocksets[int(i)] for i in perm]
         devs = np.asarray([self.fleet_devices[d] for d in chosen],
                           dtype=object)
         mesh = jax.sharding.Mesh(devs, (self.upper.axis,))
-        self.upper.remesh(mesh)
-        self.daemon.remesh(mesh, blocksets=self.blocksets)
         before, self._mesh_device_ids = self._mesh_device_ids, list(chosen)
-        self._estimator = CapacityEstimator(self.num_shards)
-        # the new placement absorbs the fleet's current capacity view;
-        # further straggler migrations require further drift
-        mon.ack_capacity()
-        return {
+        record = {
             "killed": [int(d) for d in killed],
             "stragglers": [int(d) for d in stragglers],
             "joined": [int(d) for d in joined],
@@ -502,8 +674,16 @@ class Middleware:
             "device_ids": [int(d) for d in chosen],
             "assignment": [int(a) for a in assign],
             "repartitioned": bool(repartitioned),
-            "seconds": time.perf_counter() - t0,
+            "dirty_vertices": (None if dirty is None
+                               else [int(v) for v in dirty]),
         }
+        cause = ("kill" if killed
+                 else "join" if (joined or m_new > m_old) else "rebalance")
+        self.epochs.publish(cause, mesh=mesh, partitions=self.partitions,
+                            blocksets=self.blocksets, dirty_vertices=dirty,
+                            meta=record)
+        record["seconds"] = time.perf_counter() - t0
+        return record
 
     # -- Lemma-2 rebalancing ----------------------------------------------
     def rebalance(self, capacities=None) -> np.ndarray:
@@ -560,18 +740,188 @@ class Middleware:
         self.partitions = list(self.upper.partition(
             self.graph, self.num_shards, fractions=fractions))
         self._setup_blocks()
-        self.daemon.bind(self.program, self.n)
-        self.upper.bind(self.program, self.num_shards)
-        if self._fused_kind == "oocore":
-            self.daemon.bind_super_shards(self.blocksets,
-                                          mesh=self.upper.mesh,
-                                          axis=self.upper.axis,
-                                          config=self.oocore)
-        elif self._fused:
-            self.daemon.bind_shards(self.blocksets, mesh=self.upper.mesh,
-                                    axis=self.upper.axis)
-        self._loop = None
+        self.epochs.publish(
+            "rebalance",
+            mesh=self.upper.mesh if self._fused else None,
+            partitions=self.partitions, blocksets=self.blocksets,
+            dirty_vertices=None,  # edges changed shards arbitrarily
+            meta={"fractions": [float(f) for f in fractions]})
         return fractions
+
+    # -- out-of-core re-planning -------------------------------------------
+    def oocore_replan(self, config=None) -> StructureEpoch:
+        """Re-plans super-shard ownership at runtime — the out-of-core
+        structure trigger (cause ``"oocore_replan"``).
+
+        ``config`` replaces the composition's ``OocoreConfig`` (a
+        shrunken HBM budget mid-deployment, a changed hot fraction);
+        omitted, the current config is re-planned as-is (useful after an
+        external change to what else occupies the device).  The daemon
+        hook recuts the hot set and the cold super-shards under the new
+        budget and fills the published epoch's ``oocore_plan``; the
+        fused loop recompiles at its next run/poll.  The streaming cut
+        never changes merged values for idempotent monoids, but a sum
+        accumulates super-shards in plan order — so like every
+        placement change the epoch is published with
+        ``dirty_vertices=None`` and volatile serve-cache entries cannot
+        survive it.
+        """
+        if self._fused_kind != "oocore":
+            raise ValueError(
+                "oocore_replan() needs an out-of-core composition "
+                "(Middleware(oocore=OocoreConfig(...)))")
+        t0 = time.perf_counter()
+        if config is not None:
+            self.oocore = config
+        before = self.daemon.oocore_plan
+        ep = self.epochs.publish(
+            "oocore_replan", mesh=self.upper.mesh,
+            partitions=self.partitions, blocksets=self.blocksets,
+            dirty_vertices=None,
+            meta={"oocore_config": self.oocore,
+                  "super_shards_before": int(before.num_super_shards),
+                  "hot_cols_before": int(before.hot_cols)})
+        ep.meta["super_shards_after"] = int(ep.oocore_plan.num_super_shards)
+        ep.meta["hot_cols_after"] = int(ep.oocore_plan.hot_cols)
+        ep.meta["seconds"] = time.perf_counter() - t0
+        return ep
+
+    # -- dynamic graphs (DESIGN.md §7) -------------------------------------
+    def _rebuild_dirty_blocksets(self, dirty_shards) -> list[int]:
+        """Recuts blocks for exactly the shards a mutation touched.
+
+        Clean shards keep their BlockSet *objects* (the mutation layer
+        reuses their edge arrays by reference, so the packed blocks are
+        still exact) — preserved identity is what keeps the daemons'
+        per-blockset tile/CSR caches warm.  Block and vertex-block sizes
+        stay pinned so one compiled program keeps serving every shard; a
+        dirty shard that outgrows the pinned vertex-block width forces a
+        full recut of all shards (returned list says which were recut).
+        """
+        dirty_shards = [int(j) for j in dirty_shards]
+        new_sets = list(self.blocksets)
+        try:
+            for j in dirty_shards:
+                new_sets[j] = build_blocks(self.partitions[j],
+                                           self.block_size,
+                                           vblock_size=self.vblock_size)
+        except ValueError:
+            self._setup_blocks()
+            return list(range(self.num_shards))
+        self.blocksets = new_sets
+        return dirty_shards
+
+    def apply_mutations(self, batch) -> StructureEpoch:
+        """Applies one batched graph mutation and publishes a
+        ``"mutation"`` structure epoch.
+
+        The batch (a :class:`~repro.graph.mutation.MutationBatch`, or a
+        :class:`~repro.graph.mutation.MutationLog` which is frozen
+        first) lands in deterministic order, so every middleware holding
+        the same graph that applies the same log converges to the same
+        structure bit-identically.  Only dirty shards' blocks are recut
+        (clean tiles untouched); vertex additions re-bind the compiled
+        per-vertex programs.  The returned epoch's ``meta`` carries the
+        dirty frontier (touched vertices + their out-neighbours) and
+        whether an *incremental* restart from the previous fixed point
+        is sound — idempotent monoid and no removals; deletions break
+        monotonicity even under min/max, and sum re-counts everything —
+        which :meth:`run_dynamic` consumes.
+        """
+        if isinstance(batch, graph_mutation.MutationLog):
+            batch = batch.freeze()
+        batch.validate(self.n)
+        if batch.empty:
+            return self.epochs.epoch
+        t0 = time.perf_counter()
+        n_old = self.n
+        (self.graph, self.partitions, dirty_shards,
+         dirty) = graph_mutation.apply_to_partitions(
+             self.graph, self.partitions, batch)
+        self.n = self.graph.num_vertices
+        recut = self._rebuild_dirty_blocksets(dirty_shards)
+        if self.n != n_old:
+            # per-vertex shapes changed: the compiled daemon/upper
+            # programs must re-bind.  Programs whose closures captured
+            # the old N (pagerank's (1-d)/n) must be rebuilt by the
+            # caller — algorithms deriving everything from init(graph)
+            # (sssp, wcc, bfs) work unchanged.
+            self.daemon.bind(self.program, self.n)
+            self.upper.bind(self.program, self.num_shards)
+        incremental = (self.program.monoid.idempotent
+                       and not batch.has_removals)
+        meta = {
+            "incremental": bool(incremental),
+            "frontier": graph_mutation.dirty_frontier(self.graph, dirty),
+            "edges_added": int(batch.num_added_edges),
+            "edges_removed": int(batch.num_removed_edges),
+            "vertices_added": int(batch.add_vertices),
+            "vertices_removed": int(batch.remove_vertices.size),
+            "dirty_count": int(dirty.size),
+            "shards_recut": len(recut),
+            "shards_clean": self.num_shards - len(recut),
+        }
+        ep = self.epochs.publish(
+            "mutation",
+            mesh=self.upper.mesh if self._fused else None,
+            partitions=self.partitions, blocksets=self.blocksets,
+            dirty_vertices=dirty, meta=meta)
+        ep.meta["seconds"] = time.perf_counter() - t0
+        return ep
+
+    def run_dynamic(self, batch, *, max_iterations: int | None = None
+                    ) -> Result:
+        """Applies ``batch`` and restarts the program on the mutated
+        graph — incrementally when that is sound, cold otherwise.
+
+        Incremental restart resumes from the previous run's fixed point
+        with only the dirty frontier active: for an idempotent monoid
+        and an add-only batch the old fixed point is a valid
+        intermediate of the new computation (min/max only ever improve
+        along the added edges), so convergence from it is exact — and
+        bit-identical to a cold restart, in far fewer iterations for
+        small batches.  Removals or a non-idempotent monoid fall back to
+        a cold restart; ``self.last_restart`` records the mode and why.
+        """
+        prev = self._last_state
+        ep = self.apply_mutations(batch)
+        meta = ep.meta if ep.cause == "mutation" else {}
+        incremental = bool(meta.get("incremental")) and prev is not None
+        if incremental:
+            if prev.shape[0] < self.n:
+                # added vertex ids start at the program's initial state
+                state0, _ = self.program.init(self.graph)
+                prev = np.concatenate([prev, state0[prev.shape[0]:]],
+                                      axis=0)
+            prev_state = np.asarray(prev)
+
+            def init(g, _s=prev_state, _i=self.program.init):
+                return _s, _i(g)[1]
+
+            res = self.run(max_iterations, init=init,
+                           frontier=meta["frontier"])
+            mode = "dirty"
+        else:
+            res = self.run(max_iterations)
+            mode = ("cold_fallback"
+                    if meta and prev is not None and not meta.get(
+                        "incremental") else "cold")
+        if incremental:
+            reason = ""
+        elif prev is None:
+            reason = "no previous fixed point"
+        elif not self.program.monoid.idempotent:
+            reason = "non-idempotent monoid"
+        else:
+            reason = "batch removes edges/vertices"
+        self.last_restart = {
+            "mode": mode,
+            "incremental": bool(incremental),
+            "reason": reason,
+            "dirty_count": int(meta.get("dirty_count", 0)),
+            "iterations": int(res.iterations),
+        }
+        return res
 
 
 class HostDriveLoop:
@@ -627,7 +977,7 @@ class HostDriveLoop:
             mw.stats.download_bytes_cache += int((~hit).sum()) * rowbytes
         mw.stats.download_bytes_nocache += int(boundary_reads.size) * rowbytes
 
-        bucket = 1 << max(0, (int(sel.size) - 1).bit_length())
+        bucket = next_pow2(int(sel.size))
         compiling = bucket not in self._seen_buckets
         self._seen_buckets.add(bucket)
         t_busy = time.perf_counter()
@@ -648,7 +998,7 @@ class HostDriveLoop:
         return agg, cnt, boundary_reads.astype(np.int64)
 
     def run(self, max_iterations: int | None = None, *,
-            init=None) -> Result:
+            init=None, frontier=None) -> Result:
         mw = self.mw
         prog = mw.program
         o = mw.options
@@ -656,7 +1006,9 @@ class HostDriveLoop:
         max_it = max_iterations or prog.max_iterations
         state0, aux = (init or prog.init)(mw.graph)
         states = [state0.copy() for _ in range(mw.num_shards)]
-        actives = [np.ones(mw.n, dtype=bool) for _ in range(mw.num_shards)]
+        active0 = (np.ones(mw.n, dtype=bool) if frontier is None
+                   else np.asarray(frontier, dtype=bool))
+        actives = [active0.copy() for _ in range(mw.num_shards)]
         skip_ok = o.sync_skipping and prog.supports_sync_skipping()
         per_iter: list[dict] = []
         rowbytes = 4 * mw.k + 8
@@ -780,6 +1132,7 @@ class _FusedLoopBase:
     def __init__(self, mw: Middleware):
         self.mw = mw
         self._step = None
+        self._epoch_seen = -1  # bus version the compiled step targets
 
     def _build_step(self):
         raise NotImplementedError
@@ -793,22 +1146,62 @@ class _FusedLoopBase:
     def _migrate_carry(self, carry):
         raise NotImplementedError
 
+    def _mutate_carry(self, carry, state0, ep, rep):
+        """Carry re-placement for a mid-run mutation epoch (the mesh is
+        unchanged; the graph under the run is not).  Incremental: keep
+        the converged-so-far state and force the dirty frontier active —
+        sound for add-only batches under an idempotent monoid, where the
+        current state is a valid intermediate of the new computation.
+        Cold: reset to the (new graph's) initial state with everything
+        active — the rest of the run IS the cold restart."""
+        state, active = carry[0], carry[1]
+        if ep.meta.get("incremental"):
+            fr = jax.device_put(
+                np.asarray(ep.meta["frontier"], dtype=bool), rep)
+            return (state, jnp.logical_or(active, fr))
+        return (jax.device_put(state0, rep),
+                jax.device_put(np.ones(self.mw.n, dtype=bool), rep))
+
+    def _adopt_epoch(self, carry, aux_dev, init_fn):
+        """Re-places the carry for the epoch the middleware just
+        published.  Migrations move the replicated carry onto the
+        survivor mesh; mutation epochs recompute aux from the mutated
+        graph (degrees changed) and delegate to :meth:`_mutate_carry`."""
+        mw = self.mw
+        ep = mw.epochs.epoch
+        if ep.cause == "mutation":
+            rep = jax.sharding.NamedSharding(
+                mw.daemon.mesh, jax.sharding.PartitionSpec())
+            state0, aux = init_fn(mw.graph)
+            return (self._mutate_carry(carry, state0, ep, rep),
+                    jax.device_put(aux, rep))
+        return self._migrate_carry(carry), mw.upper.migrate(aux_dev)
+
     def run(self, max_iterations: int | None = None, *,
-            init=None) -> Result:
+            init=None, frontier=None) -> Result:
         mw = self.mw
         prog = mw.program
         mw.upper.reset()
         max_it = max_iterations or prog.max_iterations
-        state0, aux = (init or prog.init)(mw.graph)
+        init_fn = init or prog.init
+        state0, aux = init_fn(mw.graph)
         rep = jax.sharding.NamedSharding(mw.daemon.mesh,
                                          jax.sharding.PartitionSpec())
         state = jax.device_put(state0, rep)
         aux_dev = jax.device_put(aux, rep)
-        active = jax.device_put(np.ones(mw.n, dtype=bool), rep)
+        active0 = (np.ones(mw.n, dtype=bool) if frontier is None
+                   else np.asarray(frontier, dtype=bool))
+        if active0.shape != (mw.n,):
+            raise ValueError(f"frontier must have shape ({mw.n},), got "
+                             f"{active0.shape}")
+        active = jax.device_put(active0, rep)
         carry = self._init_carry(state, active)
         stacked = mw.daemon.stacked
-        if self._step is None:
+        if self._step is None or self._epoch_seen != mw.epochs.version:
+            # first run, or the structure advanced between runs
+            # (rebalance()/apply_mutations()): recompile against it
             self._step = self._build_step()
+            self._epoch_seen = mw.epochs.version
         blocks_total = int(sum(bs.num_blocks for bs in mw.blocksets))
         per_iter: list[dict] = []
         t0 = time.perf_counter()
@@ -816,19 +1209,27 @@ class _FusedLoopBase:
         converged = False
 
         for it in range(1, max_it + 1):
-            # Elastic check between fused iterations: a device killed "at
-            # iteration k" dies before iteration k executes, and the run
-            # resumes from the carried (replicated) state — no checkpoint.
-            mig = mw._poll_faults(it) if mw.monitor is not None else None
-            if mig is not None:
-                t_mig = time.perf_counter()
-                carry = self._migrate_carry(carry)
-                aux_dev = mw.upper.migrate(aux_dev)
+            # Structure check between fused iterations: a device killed
+            # (or a mutation batch due) "at iteration k" lands before
+            # iteration k executes.  The poll publishes epochs; the loop
+            # reacts to the bus VERSION — it never remeshes or replans
+            # anything itself — and the run resumes from the carried
+            # (replicated) state: no checkpoint.
+            ev = mw._poll_structure(it)
+            if mw.epochs.version != self._epoch_seen:
+                t_reb = time.perf_counter()
+                carry, aux_dev = self._adopt_epoch(carry, aux_dev,
+                                                   init_fn)
                 stacked = mw.daemon.stacked
-                self._step = self._build_step()  # new mesh → new program
+                self._step = self._build_step()  # new structure → new program
+                self._epoch_seen = mw.epochs.version
                 blocks_total = int(sum(bs.num_blocks
                                        for bs in mw.blocksets))
-                mig["seconds"] += time.perf_counter() - t_mig
+                reb_s = time.perf_counter() - t_reb
+                for r in ev.values():  # charge the rebuild to its trigger
+                    if "seconds" in r:
+                        r["seconds"] += reb_s
+                        break
             carry, done, n_active, blocks_run, extra = self._advance(
                 carry, aux_dev, jnp.int32(it), stacked)
             mw.stats.rounds_total += 1
@@ -838,8 +1239,7 @@ class _FusedLoopBase:
                    "blocks_run": int(sum(shard_blocks)),
                    "shard_blocks_run": shard_blocks,
                    "active": int(n_active)}
-            if mig is not None:
-                rec["migration"] = mig
+            rec.update(ev)
             rec.update(extra)
             per_iter.append(rec)
             if bool(done):
@@ -1218,6 +1618,39 @@ class AsyncDriveLoop(_FusedLoopBase):
         held_c = jax.device_put(np.zeros((m, mw.n), np.int32), shard)
         return (state, active, backlog, held_p, held_c,
                 jnp.float32(float(theta)))
+
+    def _mutate_carry(self, carry, state0, ep, rep):
+        """Mid-run mutation under the async model.  Held partials were
+        computed on the pre-mutation graph and must never be consumed —
+        they restart at the monoid identity, so the next merge is one
+        barriered all-fresh step.  Incremental: state and theta carry
+        over, and the dirty frontier joins both the shared frontier and
+        every device's backlog (a source suppressed by a hold is
+        re-delivered against the mutated graph).  Cold: full async
+        reset on the new graph."""
+        mw = self.mw
+        state, active, backlog, held_p, held_c, theta = carry
+        m = mw.daemon.m
+        shard = jax.sharding.NamedSharding(
+            mw.upper.mesh, jax.sharding.PartitionSpec(mw.upper.axis))
+        held_p = jax.device_put(
+            np.full((m, mw.n, mw.k), mw.program.monoid.identity,
+                    np.float32), shard)
+        held_c = jax.device_put(np.zeros((m, mw.n), np.int32), shard)
+        if ep.meta.get("incremental"):
+            fr = np.asarray(ep.meta["frontier"], dtype=bool)
+            active = jnp.logical_or(active, jax.device_put(fr, rep))
+            backlog_host = np.asarray(jax.device_get(backlog)) | fr[None, :]
+            backlog = jax.device_put(
+                np.ascontiguousarray(backlog_host), shard)
+            theta = jnp.float32(float(theta))
+        else:
+            state = jax.device_put(state0, rep)
+            active = jax.device_put(np.ones(mw.n, dtype=bool), rep)
+            backlog = jax.device_put(np.zeros((m, mw.n), dtype=bool),
+                                     shard)
+            theta = jnp.float32(mw.model.theta0)
+        return (state, active, backlog, held_p, held_c, theta)
 
     def _advance(self, carry, aux, it, stacked):
         (state, active, backlog, held_p, held_c, theta, done, n_active,

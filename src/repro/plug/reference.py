@@ -1,5 +1,5 @@
 """Pure-jnp full-graph reference: the oracle every backend is tested
-against (DESIGN.md §7).  No blocks, no shards, no middleware — one dense
+against (DESIGN.md §8).  No blocks, no shards, no middleware — one dense
 Gen → Merge → Apply per iteration over the whole edge list."""
 from __future__ import annotations
 

@@ -164,10 +164,13 @@ class MeshUpperSystem(HostUpperSystem):
         Checkpoint-free migration's upper half: the compiled merge fns
         (and the compressed wire, if any) were built for the old mesh
         axis length and are invalidated; ``m`` is re-derived and the
-        stacked-shard divisibility re-checked.  The caller (the
-        middleware's ``migrate``) is responsible for re-binding the
-        daemon's block tensors onto the same mesh and for
-        :meth:`migrate`-ing the replicated run state.
+        stacked-shard divisibility re-checked.  Since the structure-
+        epoch refactor (DESIGN.md §7) the only caller is the epoch
+        bus's ``"upper"`` rebuild hook — trigger call-sites publish a
+        :class:`~repro.plug.epoch.StructureEpoch`, the ordered hooks
+        (upper, then daemon, then capacity) do the rebuilding, and the
+        drive loops re-place live state when they observe the version
+        move; nothing calls ``remesh`` directly.
         """
         if self.axis not in mesh.axis_names:
             raise ValueError(

@@ -46,7 +46,8 @@ class CacheStats:
 @dataclasses.dataclass
 class _Entry:
     value: object
-    deps: np.ndarray  # vertex ids this answer depends on
+    deps: np.ndarray | None  # vertex ids this answer depends on;
+    #                          None = global support (any mutation hits)
     durable: bool     # survives a mesh migration (bit-identity guarantee)
 
 
@@ -81,15 +82,19 @@ class ServeCache:
         """Caches ``value`` under ``key``.
 
         deps: vertex ids the answer depends on — consulted by
-          :meth:`invalidate`.  For seed-local queries the seed set is
-          the minimal honest choice; an empty set means "never
-          invalidated by vertex mutation".
+          :meth:`invalidate`.  The honest choice is the answer's
+          *support* (``serve.session.answer_deps``): every vertex whose
+          mutation could change the answer, not just the seeds.  An
+          empty set means "never invalidated by vertex mutation";
+          ``None`` means global support — ANY vertex mutation drops the
+          entry (converged analytics fields served by lookup queries).
         durable: False marks the entry placement-dependent; it is
           dropped by :meth:`flush_volatile` on migration.
         """
         self._entries[key] = _Entry(
             value=value,
-            deps=np.asarray(sorted({int(d) for d in deps}), dtype=np.int64),
+            deps=(None if deps is None else np.asarray(
+                sorted({int(d) for d in deps}), dtype=np.int64)),
             durable=bool(durable))
         self._entries.move_to_end(key)
         self.stats.inserts += 1
@@ -105,17 +110,36 @@ class ServeCache:
         if ids.size == 0 or not self._entries:
             return 0
         drop = [k for k, e in self._entries.items()
-                if e.deps.size and np.isin(e.deps, ids).any()]
+                if e.deps is None
+                or (e.deps.size and np.isin(e.deps, ids).any())]
         for k in drop:
             del self._entries[k]
         self.stats.invalidated += len(drop)
         return len(drop)
 
-    def flush_volatile(self) -> int:
-        """Migration hook: drops every non-durable entry (answers whose
+    def flush_volatile(self, dirty=None) -> int:
+        """Migration hook: drops non-durable entries (answers whose
         validity depended on the old placement), keeps the rest; returns
-        how many were dropped."""
-        drop = [k for k, e in self._entries.items() if not e.durable]
+        how many were dropped.
+
+        ``dirty`` scopes the flush to the vertices the migration's
+        structure epoch actually touched: a pure re-placement that moved
+        only some shards between devices affects only answers whose
+        dependency set intersects the moved shards' destinations, so
+        volatile entries outside the dirty region survive.  ``None``
+        (no epoch metadata, a re-partition, or a changed mesh size)
+        keeps the global flush.  Dep-less volatile entries are always
+        dropped — "no deps" means "never invalidated by vertex
+        mutation", not "placement-independent".
+        """
+        if dirty is None:
+            drop = [k for k, e in self._entries.items() if not e.durable]
+        else:
+            ids = np.asarray(list(dirty), dtype=np.int64)
+            drop = [k for k, e in self._entries.items()
+                    if not e.durable
+                    and (e.deps is None or e.deps.size == 0
+                         or np.isin(e.deps, ids).any())]
         for k in drop:
             del self._entries[k]
         self.stats.flushed += len(drop)

@@ -31,7 +31,7 @@ import numpy as np
 
 from repro.serve.cache import ServeCache
 from repro.serve.queue import AdmissionQueue, Query, VirtualClock
-from repro.serve.session import GraphServeSession
+from repro.serve.session import GraphServeSession, answer_deps
 
 
 @dataclasses.dataclass
@@ -92,11 +92,27 @@ class GraphServeRouter:
             fam.kind, fam.params, [q.seeds for q in queries])
         if record["migrations"]:
             # the mesh changed under us: drop exactly the entries whose
-            # validity depended on the old placement, keep the rest
-            self.cache.flush_volatile()
+            # validity depended on the old placement, keep the rest.
+            # A pure re-placement's epoch says which vertices moved
+            # device groups; flushing is scoped to them.  Any migration
+            # without that metadata (an analytics run's, a re-partition,
+            # a resized mesh: dirty_vertices None) falls back to the
+            # global volatile flush.
+            dirty: set[int] | None = set()
+            for m in record["migrations"]:
+                dv = m.get("dirty_vertices")
+                if dv is None:
+                    dirty = None
+                    break
+                dirty.update(int(v) for v in dv)
+            self.cache.flush_volatile(dirty)
         per_query_service = record["service_s"]
         for p, q, value in zip(pendings, queries, answers):
-            self.cache.insert(q.cache_key, value, deps=q.seeds,
+            # deps = the answer's support, not its seeds: mutation
+            # invalidation must catch edges added anywhere the
+            # propagation reached (serve.session.answer_deps)
+            self.cache.insert(q.cache_key, value,
+                              deps=answer_deps(q.kind, q.seeds, value),
                               durable=record["durable"])
             self._done[p.ticket] = Answer(
                 query=q, value=value, cached=False,
@@ -120,6 +136,20 @@ class GraphServeRouter:
             self._run_batch(batch)
             n += len(batch)
         return n
+
+    # -- dynamic graphs (DESIGN.md §7) -------------------------------------
+    def mutate(self, batch) -> dict:
+        """Applies a mutation batch to the served graph and invalidates
+        exactly the cache entries whose dependency set — the answer's
+        reached *support*, plus every lookup entry (global analytics
+        support) — intersects the dirty region, durable and volatile
+        alike: a mutation changes answers, unlike a migration, so the
+        bit-identity guarantee that lets durable entries survive a
+        re-placement does not apply here."""
+        dirty = self.session.apply_mutations(batch)
+        dropped = self.cache.invalidate(dirty)
+        return {"dirty_vertices": int(dirty.size),
+                "entries_dropped": int(dropped)}
 
     # -- results -----------------------------------------------------------
     def result(self, ticket: int) -> Answer | None:

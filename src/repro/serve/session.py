@@ -29,7 +29,9 @@ import time
 
 import numpy as np
 
-from repro.graph.algorithms import (BATCHED_QUERIES, pagerank, wcc)
+from repro.core.pow2 import pow2_bucket
+from repro.graph import mutation as graph_mutation
+from repro.graph.algorithms import (BATCHED_QUERIES, INF, pagerank, wcc)
 from repro.graph.structure import Graph
 from repro.plug.middleware import Middleware
 from repro.plug.protocols import PlugOptions
@@ -42,8 +44,36 @@ LOOKUP_FIELDS = ("pagerank", "wcc")
 
 def _bucket(n: int, max_batch: int) -> int:
     """Smallest power of two ≥ n, capped at max_batch."""
-    b = 1 << max(0, (n - 1).bit_length())
-    return min(b, max_batch)
+    return pow2_bucket(n, max_batch)
+
+
+def answer_deps(kind: str, seeds, value):
+    """Vertex ids a cached answer depends on — the answer's *support*.
+
+    Scoped mutation invalidation is only sound if an entry's dependency
+    set covers every vertex whose mutation could change the answer.
+    For the monotone propagate-from-seeds kinds that set is not the
+    seed set but the support — the vertices the propagation actually
+    reached (finite khop/sssp distance, nonzero ppr mass): an edge
+    mutation can only alter the answer if the edge's source already
+    carries distance/mass, i.e. sits in the support, and a mutation's
+    dirty region always contains both endpoints.  Seeds alone go stale
+    the moment an edge is added *downstream* of a reachable vertex.
+    ``lookup`` answers read a converged global analytics field
+    (PageRank/WCC fixed points), which any mutation anywhere can move —
+    their support is the whole graph, returned as ``None`` (the cache's
+    global-deps sentinel).
+    """
+    seeds = np.asarray([int(s) for s in np.atleast_1d(np.asarray(seeds))],
+                       dtype=np.int64)
+    if kind == "lookup":
+        return None
+    value = np.asarray(value)
+    if kind in ("khop", "sssp"):
+        reached = np.flatnonzero(value < INF)
+    else:  # ppr and future mass-propagation kinds
+        reached = np.flatnonzero(value != 0)
+    return np.union1d(reached.astype(np.int64), seeds)
 
 
 class GraphServeSession:
@@ -208,6 +238,35 @@ class GraphServeSession:
             "mesh_epoch": self.mesh_epoch,
         }
         return answers, record
+
+    # -- dynamic graphs (DESIGN.md §7) -------------------------------------
+    def apply_mutations(self, batch) -> np.ndarray:
+        """Applies one mutation batch to the served graph and to every
+        compiled family middleware; returns the dirty vertex region
+        (touched vertices) the owner of the result cache must
+        invalidate.
+
+        The batch lands in the mutation layer's deterministic order, so
+        the session graph and each family's independently-mutated
+        partitions converge to the same structure — families keep their
+        compiled steps' clean shards and recut only dirty blocks (each
+        publishes its own ``"mutation"`` structure epoch).  Converged
+        analytics states are dropped wholesale: PageRank/WCC are global
+        fixed points, recomputed on next lookup.  Batches that add
+        vertices are only sound for families whose program factories
+        derive every shape from ``init(graph)``.
+        """
+        if isinstance(batch, graph_mutation.MutationLog):
+            batch = batch.freeze()
+        batch.validate(self.graph.num_vertices)
+        if batch.empty:
+            return np.empty(0, np.int64)
+        self.graph, dirty = graph_mutation.apply_to_graph(self.graph,
+                                                          batch)
+        for fam in self._families.values():
+            fam["mw"].apply_mutations(batch)
+        self._analytics.clear()
+        return dirty
 
     # -- introspection -----------------------------------------------------
     @property

@@ -154,6 +154,61 @@ def test_baseline_oocore_table(baseline):
         max(r["sparse_slice"]["prefetch_speedup"] for r in rows), rel=1e-9)
 
 
+DYNAMIC_ALGS = ("pagerank", "sssp_bf", "wcc")
+
+
+def test_baseline_dynamic_table_covers_every_cell(baseline):
+    """Every algorithm × batch-size cell of the dynamic-graph table,
+    each carrying the mutation-epoch accounting (dirty shards recut vs
+    left clean, apply seconds) and a timed cold arm."""
+    dy = baseline["dynamic"]
+    sizes = dy["_meta"]["batch_sizes"]
+    assert len(sizes) >= 2
+    for alg in DYNAMIC_ALGS:
+        assert set(dy[alg]) == {f"b{b}" for b in sizes}
+        for cell in dy[alg].values():
+            assert cell["edges_added"] >= 1
+            assert cell["dirty_count"] >= 1
+            assert cell["shards_recut"] >= 1
+            assert (cell["shards_recut"] + cell["shards_clean"]
+                    == baseline["_meta"]["num_devices"])
+            assert cell["mutation_apply_s"] > 0
+            assert cell["cold_s"] > 0 and cell["iterations_cold"] >= 1
+
+
+def test_baseline_dynamic_incremental_arms(baseline):
+    """The idempotent workloads (sssp's min, wcc's min) must take the
+    incremental dirty-frontier restart in every cell, land bit-identical
+    to the cold restart, and — the acceptance — converge in no more
+    iterations than cold, strictly fewer (and faster) at the smallest
+    batch."""
+    dy = baseline["dynamic"]
+    small = f"b{min(dy['_meta']['batch_sizes'])}"
+    for alg in ("sssp_bf", "wcc"):
+        for key, cell in dy[alg].items():
+            assert cell["mode"] == "dirty" and cell["reason"] == ""
+            assert cell["bit_identical"] is True
+            assert cell["iterations_dirty"] <= cell["iterations_cold"]
+            # derived data: speedup must agree with the recorded arms
+            assert cell["speedup"] == pytest.approx(
+                cell["cold_s"] / cell["dirty_s"], rel=1e-9)
+            if key == small:
+                assert cell["iterations_dirty"] < cell["iterations_cold"]
+                assert cell["dirty_s"] < cell["cold_s"]
+    assert set(dy["_meta"]["smallest_batch_winners"]) <= {"sssp_bf", "wcc"}
+    assert dy["_meta"]["smallest_batch_winners"]
+
+
+def test_baseline_dynamic_pagerank_is_cold_fallback(baseline):
+    """pagerank's sum monoid cannot reuse the old fixed point; the table
+    must record the honest fallback, not a fabricated dirty arm."""
+    for cell in baseline["dynamic"]["pagerank"].values():
+        assert cell["mode"] == "cold_fallback"
+        assert cell["reason"] == "non-idempotent monoid"
+        assert cell["dirty_s"] is None and cell["speedup"] is None
+        assert cell["bit_identical"] is None
+
+
 def test_baseline_compressed_wire_rows(baseline):
     """The sync-wire measurement: both sum-monoid workloads, byte
     accounting showing real volume reduction (int8 wire strictly below

@@ -1,0 +1,387 @@
+"""The structure-epoch layer (DESIGN.md §7): one versioned event for
+every rebuild cause.
+
+Pins the bus semantics (ordered named hooks, all-or-nothing version
+advance, the ``rebuilding`` flag), proves all five triggers — kill,
+join, rebalance, out-of-core re-plan, mutation — route through one
+``publish``, and enforces the refactor's central invariant: drive loops
+react to the bus *version* and never call ``remesh``/``replan``/
+``bind_shards`` themselves.  The rebuild-path-equivalence matrix pins
+that every trigger leaves the middleware bit-identical to one built
+fresh on the post-trigger structure (idempotent monoid)."""
+import inspect
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro import plug  # noqa: E402
+from repro.core.balance import CapacityEstimator  # noqa: E402
+from repro.dist.fault import FleetMonitor  # noqa: E402
+from repro.graph import generate  # noqa: E402
+from repro.graph.algorithms import sssp_bf  # noqa: E402
+from repro.graph.mutation import MutationLog, apply_to_graph  # noqa: E402
+from repro.plug.epoch import CAUSES, StructureEpoch, StructureEpochBus  # noqa: E402
+
+SHARDS = 8
+
+
+def _graph(seed=11):
+    return generate.rmat(256, 2048, seed=seed)
+
+
+def _mw(g, **kw):
+    kw.setdefault("daemon", "sharded")
+    kw.setdefault("upper", "mesh")
+    kw.setdefault("model", "bsp")
+    kw.setdefault("num_shards", SHARDS)
+    return plug.Middleware(g, sssp_bf(g), **kw)
+
+
+def _epoch0():
+    return StructureEpoch(version=0, cause="init", mesh=None,
+                          partitions=(), blocksets=())
+
+
+# --------------------------------------------------------------------------
+# bus semantics
+# --------------------------------------------------------------------------
+def test_bus_starts_uninitialized():
+    bus = StructureEpochBus()
+    assert bus.epoch is None
+    assert bus.version == -1
+    assert not bus.rebuilding
+    with pytest.raises(RuntimeError):
+        bus.publish("kill", mesh=None, partitions=(), blocksets=())
+
+
+def test_initialize_requires_init_cause_and_is_once():
+    bus = StructureEpochBus()
+    with pytest.raises(ValueError):
+        bus.initialize(StructureEpoch(version=0, cause="kill", mesh=None,
+                                      partitions=(), blocksets=()))
+    bus.initialize(_epoch0())
+    assert bus.version == 0
+    with pytest.raises(RuntimeError):
+        bus.initialize(_epoch0())
+
+
+def test_publish_rejects_unknown_and_init_cause():
+    bus = StructureEpochBus()
+    bus.initialize(_epoch0())
+    for cause in ("remesh", "restart", "init", ""):
+        with pytest.raises(ValueError):
+            bus.publish(cause, mesh=None, partitions=(), blocksets=())
+    assert bus.version == 0  # nothing advanced
+
+
+def test_hooks_run_in_subscription_order_with_old_epoch():
+    bus = StructureEpochBus()
+    bus.initialize(_epoch0())
+    calls = []
+    bus.subscribe("a", lambda new, old: calls.append(("a", new.version,
+                                                      old.version)))
+    bus.subscribe("b", lambda new, old: calls.append(("b", new.version,
+                                                      old.version)))
+    ep = bus.publish("rebalance", mesh=None, partitions=(), blocksets=())
+    assert calls == [("a", 1, 0), ("b", 1, 0)]
+    assert ep is bus.epoch and ep.version == 1
+
+
+def test_resubscribe_replaces_in_place_keeping_position():
+    bus = StructureEpochBus()
+    bus.initialize(_epoch0())
+    calls = []
+    bus.subscribe("a", lambda new, old: calls.append("a1"))
+    bus.subscribe("b", lambda new, old: calls.append("b"))
+    bus.subscribe("a", lambda new, old: calls.append("a2"))  # swap logic
+    assert bus.subscribers == ["a", "b"]
+    bus.publish("rebalance", mesh=None, partitions=(), blocksets=())
+    assert calls == ["a2", "b"]
+    bus.unsubscribe("a")
+    assert bus.subscribers == ["b"]
+
+
+def test_failed_hook_leaves_bus_on_old_version():
+    bus = StructureEpochBus()
+    bus.initialize(_epoch0())
+    ran = []
+    bus.subscribe("ok", lambda new, old: ran.append(new.version))
+
+    def boom(new, old):
+        raise RuntimeError("rebuild failed")
+
+    bus.subscribe("boom", boom)
+    with pytest.raises(RuntimeError, match="rebuild failed"):
+        bus.publish("kill", mesh=None, partitions=(), blocksets=())
+    # the failed rebuild is visible as a version mismatch, not
+    # half-applied-but-acknowledged
+    assert bus.version == 0
+    assert ran == [1]
+    assert not bus.rebuilding  # depth unwound through the exception
+
+
+def test_rebuilding_flag_spans_exactly_the_hook_dispatch():
+    bus = StructureEpochBus()
+    bus.initialize(_epoch0())
+    seen = []
+    bus.subscribe("spy", lambda new, old: seen.append(bus.rebuilding))
+    assert not bus.rebuilding
+    bus.publish("mutation", mesh=None, partitions=(), blocksets=())
+    assert seen == [True]
+    assert not bus.rebuilding
+
+
+def test_publish_canonicalizes_dirty_vertices():
+    bus = StructureEpochBus()
+    bus.initialize(_epoch0())
+    ep = bus.publish("mutation", mesh=None, partitions=(), blocksets=(),
+                     dirty_vertices=[5, 1, 5, 3])
+    np.testing.assert_array_equal(ep.dirty_vertices, [1, 3, 5])
+    assert ep.dirty_vertices.dtype == np.int64
+    assert not ep.global_change
+    ep2 = bus.publish("rebalance", mesh=None, partitions=(), blocksets=())
+    assert ep2.global_change  # dirty None = no vertex assumed clean
+
+
+# --------------------------------------------------------------------------
+# five-trigger routing through the middleware's bus
+# --------------------------------------------------------------------------
+def test_middleware_initializes_epoch_zero():
+    mw = _mw(_graph())
+    assert mw.epochs.version == 0
+    assert mw.epochs.epoch.cause == "init"
+    assert mw.epochs.subscribers == ["upper", "daemon", "capacity"]
+    assert mw.epochs.epoch.partitions == tuple(mw.partitions)
+
+
+def test_kill_publishes_kill_epoch():
+    mw = _mw(_graph(), failures=plug.FailureSchedule(kills=[(2, 2)]))
+    res = mw.run()
+    assert res.converged
+    assert mw.epochs.version == 1
+    assert mw.epochs.epoch.cause == "kill"
+    assert mw.epochs.epoch.meta["killed"] == [2]
+
+
+def test_join_publishes_join_epoch():
+    mw = _mw(_graph(), failures=plug.FailureSchedule(
+        kills=[(2, 1)], recoveries=[(5, 1)]))
+    res = mw.run(max_iterations=200)
+    causes = [mw.epochs.epoch.cause]
+    assert res.converged
+    # two epochs happened: the kill then the join back to full size
+    assert mw.epochs.version == 2
+    assert causes == ["join"]
+    assert mw.epochs.epoch.meta["devices_after"] == 8
+
+
+def test_rebalance_publishes_rebalance_epoch():
+    mw = _mw(_graph())
+    mw.rebalance(capacities=np.linspace(1.0, 2.0, SHARDS))
+    assert mw.epochs.version == 1
+    assert mw.epochs.epoch.cause == "rebalance"
+    assert mw.epochs.epoch.global_change
+    assert len(mw.epochs.epoch.meta["fractions"]) == SHARDS
+
+
+def test_oocore_replan_publishes_with_plan_output():
+    mw = _mw(_graph(), oocore=plug.OocoreConfig(hbm_budget=40_000,
+                                                hot_fraction=0.3))
+    assert mw.epochs.epoch.oocore_plan is not None
+    mw.oocore_replan(plug.OocoreConfig(hbm_budget=20_000, hot_fraction=0.2))
+    ep = mw.epochs.epoch
+    assert ep.cause == "oocore_replan" and ep.version == 1
+    # the daemon hook filled the plan: an OUTPUT of the rebuild
+    assert ep.oocore_plan is mw.daemon.oocore_plan
+    assert ep.meta["hot_cols_after"] <= ep.meta["hot_cols_before"]
+
+
+def test_oocore_replan_requires_oocore_composition():
+    with pytest.raises(ValueError, match="out-of-core"):
+        _mw(_graph()).oocore_replan()
+
+
+def test_mutation_publishes_mutation_epoch_with_dirty_scope():
+    mw = _mw(_graph())
+    ep = mw.apply_mutations(MutationLog().add_edge(3, 9).add_edge(40, 2))
+    assert ep.cause == "mutation" and ep.version == 1
+    np.testing.assert_array_equal(ep.dirty_vertices, [2, 3, 9, 40])
+    assert not ep.global_change
+    assert ep.meta["shards_clean"] + ep.meta["shards_recut"] == SHARDS
+    assert ep.meta["edges_added"] == 2
+
+
+def test_empty_mutation_publishes_nothing():
+    mw = _mw(_graph())
+    ep = mw.apply_mutations(MutationLog())
+    assert ep is mw.epochs.epoch
+    assert mw.epochs.version == 0
+
+
+def test_all_causes_are_reachable():
+    assert set(CAUSES) == {"init", "kill", "join", "rebalance",
+                           "oocore_replan", "mutation"}
+
+
+# --------------------------------------------------------------------------
+# enforcement: loops react to the version, they never rebuild
+# --------------------------------------------------------------------------
+_REBUILD_CALLS = (".remesh(", ".bind_shards(", ".bind_super_shards(",
+                  ".oocore_replan(", "._setup_blocks(", ".publish(")
+
+
+@pytest.mark.parametrize("loop_cls", [
+    plug.DriveLoop, plug.AsyncDriveLoop, plug.OocoreDriveLoop,
+    plug.HostDriveLoop])
+def test_drive_loops_never_call_rebuild_methods(loop_cls):
+    """The refactor's invariant, statically: no drive loop source
+    contains a structure-rebuild call — they go through
+    ``Middleware._poll_structure`` → publish → hooks, and adopt the
+    result by watching the bus version."""
+    mro = [c for c in inspect.getmro(loop_cls) if c is not object]
+    src = "".join(inspect.getsource(c) for c in set(mro))
+    for token in _REBUILD_CALLS:
+        assert token not in src, (
+            f"{loop_cls.__name__} calls {token!r} directly — structure "
+            "rebuilds must route through StructureEpochBus.publish")
+
+
+def test_rebuilds_happen_only_while_bus_is_rebuilding():
+    """Runtime twin of the static check: every ``remesh`` call on the
+    upper system and the daemon lands inside a publish (the bus's
+    ``rebuilding`` flag is set), for a mid-run kill AND a between-runs
+    rebalance."""
+    g = _graph()
+    mw = _mw(g, failures=plug.FailureSchedule(kills=[(2, 2)]))
+    states = []
+
+    def spy(obj, name):
+        orig = getattr(obj, name)
+
+        def wrapped(*a, **kw):
+            states.append((name, mw.epochs.rebuilding))
+            return orig(*a, **kw)
+
+        setattr(obj, name, wrapped)
+
+    spy(mw.upper, "remesh")
+    spy(mw.daemon, "remesh")
+    mw.run()
+    mw.rebalance(capacities=np.linspace(1.0, 2.0, SHARDS))
+    assert len(states) >= 4  # both spies fired for both triggers
+    assert all(inside for _, inside in states)
+
+
+# --------------------------------------------------------------------------
+# rebuild-path equivalence: every trigger ≡ fresh build (idempotent monoid)
+# --------------------------------------------------------------------------
+def _fresh_fixed_point(g):
+    return np.asarray(_mw(g).run().state)
+
+
+@pytest.mark.parametrize("trigger", ["kill", "join", "rebalance",
+                                     "oocore_replan", "mutation"])
+def test_rebuild_path_equivalence(trigger):
+    """Whatever rebuilt the structure, the min-monoid fixed point is
+    bit-identical to a Middleware built fresh against the post-trigger
+    structure — rebuild correctness is one property, not five."""
+    g = _graph(seed=23)
+    g_final = g
+    if trigger == "kill":
+        mw = _mw(g, failures=plug.FailureSchedule(kills=[(2, 2)]))
+        res = mw.run()
+    elif trigger == "join":
+        mw = _mw(g, failures=plug.FailureSchedule(kills=[(2, 1)],
+                                                  recoveries=[(5, 1)]))
+        res = mw.run(max_iterations=200)
+    elif trigger == "rebalance":
+        mw = _mw(g)
+        mw.rebalance(capacities=np.linspace(2.0, 1.0, SHARDS))
+        res = mw.run()
+    elif trigger == "oocore_replan":
+        mw = _mw(g, oocore=plug.OocoreConfig(hbm_budget=40_000,
+                                             hot_fraction=0.3))
+        mw.run()
+        mw.oocore_replan(plug.OocoreConfig(hbm_budget=20_000,
+                                           hot_fraction=0.2))
+        res = mw.run()
+    else:
+        mw = _mw(g)
+        mw.run()
+        log = MutationLog().add_edge(7, 101, 1.0).add_edge(200, 3, 2.0)
+        mw.apply_mutations(log)
+        g_final, _ = apply_to_graph(g, log.freeze())
+        res = mw.run()
+    assert res.converged
+    assert mw.epochs.version >= 1
+    np.testing.assert_array_equal(np.asarray(res.state),
+                                  _fresh_fixed_point(g_final))
+
+
+# --------------------------------------------------------------------------
+# epoch-keyed capacity views
+# --------------------------------------------------------------------------
+def test_estimator_is_rekeyed_per_epoch():
+    mw = _mw(_graph())
+    est0 = mw._estimator
+    assert est0.epoch == 0
+    mw.rebalance(capacities=np.linspace(1.0, 2.0, SHARDS))
+    assert mw._estimator is not est0  # stale per-shard costs dropped
+    assert mw._estimator.epoch == mw.epochs.version == 1
+    assert not mw._estimator.observed
+
+
+def test_capacity_estimator_carries_epoch_field():
+    est = CapacityEstimator(4, epoch=7)
+    assert est.epoch == 7
+    assert CapacityEstimator(4).epoch == 0
+
+
+def test_monitor_on_epoch_collapses_windows_keeps_relative_capacity():
+    mon = FleetMonitor(num_hosts=4, window=8)
+    for _ in range(5):
+        for h, s in enumerate([1.0, 1.0, 1.0, 4.0]):
+            mon.record(h, s)
+    mon.ack_capacity()
+    before = mon.mean_times()
+    mon.on_epoch(1)
+    assert mon.epoch == 1
+    # windows collapsed to one synthetic sample = the pre-epoch mean:
+    # stale per-sample history gone, fleet-relative slowness kept
+    assert all(len(d) == 1 for d in mon._times)
+    np.testing.assert_allclose(mon.mean_times(), before)
+    # same slowness as the acked placement → no spurious drift
+    assert mon.capacity_drift() == pytest.approx(0.0, abs=1e-12)
+    # a degrading host under the new epoch DOES drift
+    mon.record(3, 40.0)
+    assert mon.drifted()
+
+
+def test_monitor_on_epoch_same_version_is_noop():
+    mon = FleetMonitor(num_hosts=2)
+    mon.record(0, 1.0)
+    mon.record(0, 3.0)
+    mon.on_epoch(0)  # already on epoch 0
+    assert len(mon._times[0]) == 2
+
+
+def test_monitor_drift_is_zero_with_empty_windows():
+    mon = FleetMonitor(num_hosts=3)
+    mon.ack_capacity()
+    assert mon.capacity_drift() == 0.0  # absence of evidence
+    mon.record(1, 2.0)
+    assert mon.capacity_drift() >= 0.0
+
+
+def test_monitor_epoch_keying_survives_failed_host():
+    mon = FleetMonitor(num_hosts=3)
+    for h in range(3):
+        mon.record(h, 1.0 + h)
+    mon.mark_failed(2)
+    mon.on_epoch(1)
+    assert mon.failed[2]  # a dead device stays dead across a rebuild
+    assert len(mon._times[2]) == 0  # no synthetic sample for the dead
+    assert len(mon._times[0]) == 1

@@ -1,0 +1,439 @@
+"""Dynamic graphs (DESIGN.md §7): the mutation layer end to end.
+
+Pins the batched mutation log's determinism and the incremental
+structure update (clean shards' edge arrays reused by reference, dirty
+shards recut), then the acceptance matrix: ``run_dynamic`` is
+bit-identical to a cold restart on the mutated graph across
+{pagerank, sssp, wcc} × {add, remove, mixed} × {bsp, async} ×
+{resident, oocore} — incremental ("dirty") where sound (idempotent
+monoid, add-only), cold fallback elsewhere.  Mid-run batches via
+``MutationSchedule`` land between fused iterations on both step kinds;
+the serving layer applies one batch consistently across every compiled
+family and invalidates exactly the cache entries whose dependency set —
+the answer's reached *support*, not just its seeds — intersects the
+dirty region (seed-only deps served stale answers when an edge was
+added downstream of a reachable vertex)."""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro import plug, serve  # noqa: E402
+from repro.graph import generate  # noqa: E402
+from repro.graph.algorithms import pagerank, sssp_bf, wcc  # noqa: E402
+from repro.graph.mutation import (MutationLog, MutationSchedule,  # noqa: E402
+                                  apply_to_graph, apply_to_partitions,
+                                  dirty_frontier)
+from repro.serve.cache import ServeCache  # noqa: E402
+from repro.serve.queue import Query  # noqa: E402
+
+SHARDS = 8
+REF_MAX_IT = 300
+
+_ALGS = {"pagerank": pagerank, "sssp_bf": sssp_bf, "wcc": wcc}
+_cache: dict = {}
+
+
+def _graph(alg="sssp_bf"):
+    if "g" not in _cache:
+        _cache["g"] = generate.rmat(256, 2048, seed=31)
+    g = _cache["g"]
+    return g.with_reverse_edges() if alg == "wcc" else g
+
+
+def _batch_log(alg, kind) -> MutationLog:
+    """A deterministic mutation batch per (algorithm, kind) cell.  The
+    wcc graph is symmetrized, so its adds/removes go in both
+    directions (keeping the undirected-reachability semantics)."""
+    g = _graph(alg)
+    sym = alg == "wcc"
+    log = MutationLog()
+    rng = np.random.default_rng(7)
+    if kind in ("add", "mixed"):
+        for _ in range(6):
+            u, v = (int(x) for x in rng.integers(0, 256, 2))
+            log.add_edge(u, v, 1.0)
+            if sym:
+                log.add_edge(v, u, 1.0)
+    if kind in ("remove", "mixed"):
+        for e in rng.choice(g.num_edges, 4, replace=False):
+            u, v = int(g.src[e]), int(g.dst[e])
+            log.remove_edge(u, v)
+            if sym:
+                log.remove_edge(v, u)
+    return log
+
+
+# --------------------------------------------------------------------------
+# log / batch determinism
+# --------------------------------------------------------------------------
+def test_freeze_is_insertion_order_independent():
+    a = (MutationLog().add_edge(5, 1, 2.0).add_edge(0, 3)
+         .remove_edge(9, 9).add_vertex(2).remove_vertex(7))
+    b = (MutationLog().remove_vertex(7).add_vertex(2).add_edge(0, 3)
+         .remove_edge(9, 9).add_edge(5, 1, 2.0))
+    fa, fb = a.freeze(), b.freeze()
+    for field in ("add_src", "add_dst", "add_weights", "remove_src",
+                  "remove_dst", "remove_vertices"):
+        np.testing.assert_array_equal(getattr(fa, field),
+                                      getattr(fb, field))
+    assert fa.add_vertices == fb.add_vertices == 2
+
+
+def test_freeze_dedupes_removals_keeps_duplicate_adds():
+    f = (MutationLog().remove_edge(1, 2).remove_edge(1, 2)
+         .add_edge(3, 4).add_edge(3, 4)).freeze()
+    assert f.num_removed_edges == 1   # removal is a predicate
+    assert f.num_added_edges == 2     # the graph is a COO multigraph
+
+
+def test_batch_flags_and_touched():
+    f = MutationLog().add_edge(1, 2).freeze()
+    assert not f.has_removals and not f.empty
+    np.testing.assert_array_equal(f.touched(), [1, 2])
+    assert MutationLog().freeze().empty
+    assert MutationLog().remove_vertex(3).freeze().has_removals
+
+
+def test_validate_rejects_out_of_range_ids():
+    with pytest.raises(ValueError, match="outside"):
+        MutationLog().add_edge(0, 99).freeze().validate(10)
+    # an added vertex id becomes addressable within the same batch
+    MutationLog().add_vertex().add_edge(0, 10).freeze().validate(10)
+    with pytest.raises(ValueError):
+        MutationLog().add_vertex().remove_vertex(10).freeze().validate(10)
+
+
+# --------------------------------------------------------------------------
+# application to graph / partitions
+# --------------------------------------------------------------------------
+def test_apply_to_graph_add_remove_and_grow():
+    g = _graph()
+    log = (MutationLog().add_vertex(2).add_edge(256, 257, 3.0)
+           .add_edge(0, 256).remove_edge(int(g.src[0]), int(g.dst[0])))
+    g2, dirty = apply_to_graph(g, log)
+    assert g2.num_vertices == 258
+    removed_copies = int(np.sum((g.src == g.src[0]) & (g.dst == g.dst[0])))
+    assert g2.num_edges == g.num_edges + 2 - removed_copies
+    assert {256, 257, 0, int(g.src[0]), int(g.dst[0])} <= set(dirty.tolist())
+
+
+def test_vertex_removal_is_a_tombstone():
+    g = _graph()
+    v = int(g.src[10])
+    g2, _ = apply_to_graph(g, MutationLog().remove_vertex(v))
+    assert g2.num_vertices == g.num_vertices  # the id slot survives
+    assert not np.any(g2.src == v) and not np.any(g2.dst == v)
+
+
+def test_apply_to_partitions_reuses_clean_edge_arrays():
+    g = _graph()
+    mw = plug.Middleware(g, sssp_bf(g), daemon="sharded", upper="mesh",
+                         model="bsp", num_shards=SHARDS)
+    parts = list(mw.partitions)
+    # target one shard: add an edge from a source that shard owns
+    src0 = int(parts[3].src[0])
+    g2, parts2, dirty_shards, dirty = apply_to_partitions(
+        g, parts, MutationLog().add_edge(src0, 5))
+    assert dirty_shards == [3]
+    assert sum(p.num_edges for p in parts2) == g2.num_edges
+    for j, (old, new) in enumerate(zip(parts, parts2)):
+        if j in dirty_shards:
+            assert new.num_edges == old.num_edges + 1
+        else:  # clean shards: same arrays BY REFERENCE, not copies
+            assert new.src is old.src and new.dst is old.dst
+
+
+def test_dirty_frontier_is_touched_plus_out_neighbors():
+    g = generate.Graph(num_vertices=5,
+                       src=np.array([0, 1, 2], np.int32),
+                       dst=np.array([1, 2, 3], np.int32), weights=None)
+    fr = dirty_frontier(g, [1])
+    # 1 itself, and 1's out-neighbor 2; NOT 3 (two hops) or 0 (in-nbr)
+    np.testing.assert_array_equal(fr, [False, True, True, False, False])
+
+
+# --------------------------------------------------------------------------
+# the incremental-vs-cold equivalence matrix
+# --------------------------------------------------------------------------
+def _reference(alg, g2):
+    state = plug.run_reference(g2, _ALGS[alg](g2),
+                               max_iterations=REF_MAX_IT)[0]
+    return np.asarray(state)
+
+
+@pytest.mark.parametrize("storage", ["resident", "oocore"])
+@pytest.mark.parametrize("model", ["bsp", "async"])
+@pytest.mark.parametrize("kind", ["add", "remove", "mixed"])
+@pytest.mark.parametrize("alg", sorted(_ALGS))
+def test_run_dynamic_matrix(alg, kind, model, storage):
+    """run_dynamic == cold restart on the mutated graph, everywhere.
+    Incremental restart (mode "dirty") must engage exactly for
+    idempotent monoids with add-only batches; every other cell falls
+    back cold and still answers identically."""
+    if storage == "oocore" and model == "async":
+        pytest.skip("oocore supports the barriered BSP step only")
+    g = _graph(alg)
+    prog = _ALGS[alg](g)
+    kw = {}
+    if storage == "oocore":
+        kw["oocore"] = plug.OocoreConfig(hbm_budget=60_000,
+                                         hot_fraction=0.3)
+    mw = plug.Middleware(g, prog, daemon="sharded", upper="mesh",
+                         model=model, num_shards=SHARDS, **kw)
+    r0 = mw.run(max_iterations=REF_MAX_IT)
+    assert r0.converged
+    log = _batch_log(alg, kind)
+    res = mw.run_dynamic(log, max_iterations=REF_MAX_IT)
+    assert res.converged
+    assert mw.epochs.epoch.cause == "mutation"
+
+    incremental_sound = prog.monoid.idempotent and kind == "add"
+    assert mw.last_restart["incremental"] == incremental_sound
+    assert mw.last_restart["mode"] == ("dirty" if incremental_sound
+                                       else "cold_fallback")
+    if alg == "pagerank":
+        assert mw.last_restart["reason"] == "non-idempotent monoid"
+
+    g2, _ = apply_to_graph(g, log.freeze())
+    ref = _reference(alg, g2)
+    if prog.monoid.idempotent:
+        np.testing.assert_array_equal(np.asarray(res.state), ref)
+    else:
+        np.testing.assert_allclose(np.asarray(res.state), ref,
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_incremental_converges_faster_on_small_batches():
+    """The point of the dirty path: resuming from the previous fixed
+    point with only the frontier active takes fewer iterations than a
+    cold restart for a small add-only batch."""
+    g = _graph()
+    mw = plug.Middleware(g, sssp_bf(g), daemon="sharded", upper="mesh",
+                         model="bsp", num_shards=SHARDS)
+    cold_it = mw.run().iterations
+    res = mw.run_dynamic(MutationLog().add_edge(3, 77, 1.0))
+    assert mw.last_restart["mode"] == "dirty"
+    assert res.iterations < cold_it
+
+
+def test_run_dynamic_grows_vertices_between_runs():
+    g = _graph()
+    mw = plug.Middleware(g, sssp_bf(g), daemon="sharded", upper="mesh",
+                         model="bsp", num_shards=SHARDS)
+    mw.run()
+    res = mw.run_dynamic(MutationLog().add_vertex(3)
+                         .add_edge(0, 256).add_edge(256, 257))
+    assert mw.n == 259 and res.state.shape[0] == 259
+    g2, _ = apply_to_graph(g, MutationLog().add_vertex(3)
+                           .add_edge(0, 256).add_edge(256, 257).freeze())
+    np.testing.assert_array_equal(np.asarray(res.state), _reference(
+        "sssp_bf", g2))
+
+
+# --------------------------------------------------------------------------
+# mid-run mutation (MutationSchedule)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("model", ["bsp", "async"])
+def test_mid_run_mutation_lands_between_iterations(model):
+    g = _graph()
+    log = _batch_log("sssp_bf", "add")
+    sched = MutationSchedule(events=[(3, log)])
+    mw = plug.Middleware(g, sssp_bf(g), daemon="sharded", upper="mesh",
+                         model=model, num_shards=SHARDS, mutations=sched)
+    res = mw.run(max_iterations=REF_MAX_IT)
+    assert res.converged and sched.exhausted
+    muts = [r["mutation"] for r in res.per_iteration if "mutation" in r]
+    assert len(muts) == 1 and muts[0]["incremental"]
+    # the batch landed BEFORE iteration 3 executed
+    assert "mutation" in res.per_iteration[2]
+    g2, _ = apply_to_graph(g, log.freeze())
+    np.testing.assert_array_equal(np.asarray(res.state),
+                                  _reference("sssp_bf", g2))
+
+
+def test_mid_run_removal_restarts_cold_and_stays_exact():
+    g = _graph()
+    log = _batch_log("sssp_bf", "remove")
+    mw = plug.Middleware(g, sssp_bf(g), daemon="sharded", upper="mesh",
+                         model="bsp", num_shards=SHARDS,
+                         mutations=MutationSchedule(events=[(4, log)]))
+    res = mw.run(max_iterations=REF_MAX_IT)
+    assert res.converged
+    g2, _ = apply_to_graph(g, log.freeze())
+    np.testing.assert_array_equal(np.asarray(res.state),
+                                  _reference("sssp_bf", g2))
+
+
+def test_schedule_rejects_vertex_adds():
+    with pytest.raises(ValueError, match="cannot add vertices"):
+        MutationSchedule(events=[(1, MutationLog().add_vertex())])
+
+
+def test_schedule_requires_fused_loop():
+    g = _graph()
+    with pytest.raises(ValueError, match="fused"):
+        plug.Middleware(g, sssp_bf(g), daemon="vectorized", upper="host",
+                        num_shards=4,
+                        mutations=MutationSchedule(events=[]))
+
+
+# --------------------------------------------------------------------------
+# clean-tile reuse (kernel="pallas")
+# --------------------------------------------------------------------------
+def test_mutation_recuts_only_dirty_tilesets_under_pallas():
+    g = _graph()
+    d = plug.get_daemon("sharded", kernel="pallas")
+    mw = plug.Middleware(g, sssp_bf(g), daemon=d, upper="mesh",
+                         model="bsp", num_shards=SHARDS)
+    base_recut = d.tiles_recut
+    assert base_recut >= SHARDS and d.tilesets_reused == 0
+    src0 = int(mw.partitions[2].src[0])
+    ep = mw.apply_mutations(MutationLog().add_edge(src0, 9, 1.0))
+    assert ep.meta["shards_recut"] == 1
+    # the daemon's per-blockset tile cache stayed warm for clean shards
+    assert d.tiles_recut == base_recut + 1
+    assert d.tilesets_reused == SHARDS - 1
+    res = mw.run()
+    g2, _ = apply_to_graph(g, MutationLog().add_edge(src0, 9, 1.0).freeze())
+    np.testing.assert_array_equal(np.asarray(res.state),
+                                  _reference("sssp_bf", g2))
+
+
+# --------------------------------------------------------------------------
+# serving: consistent family mutation + scoped invalidation
+# --------------------------------------------------------------------------
+def test_scoped_flush_volatile_unit():
+    c = ServeCache(16)
+    c.insert("in", 1, deps=[3, 4], durable=False)
+    c.insert("out", 2, deps=[9], durable=False)
+    c.insert("depless", 3, deps=(), durable=False)
+    c.insert("durable", 4, deps=[3], durable=True)
+    dropped = c.flush_volatile(dirty={4})
+    # scoped: intersecting + dep-less volatiles go, the rest survive
+    assert dropped == 2
+    assert "out" in c and "durable" in c and "in" not in c
+    assert c.flush_volatile(None) == 1  # global drops remaining volatile
+
+
+def test_session_applies_one_batch_to_every_family():
+    session = serve.GraphServeSession(_graph(), num_shards=SHARDS,
+                                      max_batch=4)
+    seeds = [(3,), (41,)]
+    before, _ = session.execute_batch("sssp", (), seeds)
+    log = MutationLog().add_edge(3, 200, 0.5).add_edge(200, 41, 0.5)
+    dirty = session.apply_mutations(log)
+    np.testing.assert_array_equal(dirty, [3, 41, 200])
+    after, _ = session.execute_batch("sssp", (), seeds)
+    # a fresh session on the mutated graph answers identically — the
+    # family's incrementally-updated partitions are exact
+    g2, _ = apply_to_graph(_graph(), log.freeze())
+    fresh = serve.GraphServeSession(g2, num_shards=SHARDS, max_batch=4)
+    expect, _ = fresh.execute_batch("sssp", (), seeds)
+    for a, e, b in zip(after, expect, before):
+        np.testing.assert_array_equal(a, e)
+    assert any(not np.array_equal(a, b) for a, b in zip(after, before))
+
+
+def _answer(router, q):
+    ticket, ans = router.submit(q)
+    if ans is None:
+        router.drain()
+        ans = router.result(ticket)
+    return ans
+
+
+def _sssp_ref(g, seed):
+    from repro.graph.algorithms import batched_sssp
+    return np.asarray(plug.run_reference(
+        g, batched_sssp(g, [(seed,)]), max_iterations=REF_MAX_IT)[0])[:, 0]
+
+
+def test_router_mutate_catches_downstream_edge_adds():
+    """The staleness regression support-deps exist for: an edge added
+    *downstream* of the seed (both endpoints far from it, but the
+    source reachable) changes the answer, so the entry must drop even
+    though the seed itself is untouched — seed-only deps served the
+    stale pre-mutation answer from cache here."""
+    g = _graph()
+    ref_old = _sssp_ref(g, 5)
+    finite = np.flatnonzero((ref_old < np.finfo(np.float32).max)
+                            & (np.arange(g.num_vertices) != 5))
+    order = finite[np.argsort(ref_old[finite])]
+    u, v = int(order[len(order) // 4]), int(order[-1])  # near → farthest
+    assert ref_old[v] > ref_old[u] + 1e-3
+    log = MutationLog().add_edge(u, v, 1e-3)  # shortcut: answer changes
+    g2, _ = apply_to_graph(g, log.freeze())
+    ref_new = _sssp_ref(g2, 5)
+    assert not np.array_equal(ref_old, ref_new)  # mutation matters
+    session = serve.GraphServeSession(g, num_shards=SHARDS, max_batch=4)
+    router = serve.GraphServeRouter(session, max_batch=4)
+    q = Query.make("sssp", 5)
+    _answer(router, q)
+    router.take_results()
+    rec = router.mutate(log)
+    assert rec["dirty_vertices"] == 2 and 5 not in (u, v)
+    assert router.cache.lookup(q.cache_key) is None  # support caught u
+    ans = _answer(router, Query.make("sssp", 5))
+    assert not ans.cached
+    np.testing.assert_array_equal(np.asarray(ans.value), ref_new)
+
+
+def test_router_mutate_scoped_by_support_spares_disjoint_entries():
+    """Scoping is still real: on a two-component graph a mutation inside
+    component A drops A's entry (support intersects) but spares B's —
+    whose cached answer remains provably correct, because nothing B
+    reached was touched."""
+    from repro.graph.structure import Graph
+
+    ga, gb = generate.rmat(128, 1024, seed=5), generate.rmat(128, 1024,
+                                                             seed=6)
+    g = Graph(256,
+              np.concatenate([ga.src, gb.src + 128]).astype(np.int32),
+              np.concatenate([ga.dst, gb.dst + 128]).astype(np.int32),
+              np.concatenate([ga.weights, gb.weights]))
+    session = serve.GraphServeSession(g, num_shards=SHARDS, max_batch=4)
+    router = serve.GraphServeRouter(session, max_batch=4)
+    q_a, q_b = Query.make("sssp", 7), Query.make("sssp", 200)
+    for q in (q_a, q_b):
+        router.submit(q)
+    router.drain()
+    router.take_results()
+    rec = router.mutate(MutationLog().add_edge(7, 30, 0.2))  # inside A
+    assert rec["entries_dropped"] == 1
+    assert router.cache.lookup(q_a.cache_key) is None
+    assert router.cache.lookup(q_b.cache_key) is not None  # disjoint
+    g2, _ = apply_to_graph(g, MutationLog().add_edge(7, 30, 0.2).freeze())
+    np.testing.assert_array_equal(np.asarray(_answer(router, q_a).value),
+                                  _sssp_ref(g2, 7))
+    surv = _answer(router, Query.make("sssp", 200))
+    assert surv.cached  # B answered from cache …
+    np.testing.assert_array_equal(np.asarray(surv.value),
+                                  _sssp_ref(g2, 200))  # … and correctly
+
+
+def test_router_mutate_drops_global_lookup_entries():
+    """Lookup answers read a converged global analytics field; ANY
+    mutation moves the fixed point, so their support is the whole graph
+    — the entry must drop no matter how far away the batch landed."""
+    g = _graph()
+    session = serve.GraphServeSession(g, num_shards=SHARDS, max_batch=4)
+    router = serve.GraphServeRouter(session, max_batch=4)
+    q = Query.make("lookup", 3, field="pagerank")
+    before = _answer(router, q)
+    router.take_results()
+    assert router.cache.lookup(q.cache_key) is not None
+    rec = router.mutate(MutationLog().add_edge(100, 200, 1.0))
+    assert rec["entries_dropped"] >= 1
+    assert router.cache.lookup(q.cache_key) is None  # global support
+    after = _answer(router, Query.make("lookup", 3, field="pagerank"))
+    g2, _ = apply_to_graph(g, MutationLog().add_edge(100, 200,
+                                                    1.0).freeze())
+    fresh = serve.GraphServeSession(g2, num_shards=SHARDS, max_batch=4)
+    expect, _ = fresh.execute_batch("lookup", q.params, [q.seeds])
+    np.testing.assert_allclose(np.asarray(after.value), expect[0],
+                               rtol=1e-6)
+    assert not np.array_equal(np.asarray(before.value),
+                              np.asarray(after.value))

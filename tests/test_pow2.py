@@ -1,0 +1,74 @@
+"""``core.pow2`` — the shared power-of-two bucketing/padding arithmetic.
+
+Three layers (drive-loop active-block bucketing, the sharded daemon's
+block-id padding, serving batch-size buckets) used to carry private
+copies of this; the shared module is pinned here so a regression breaks
+one test file, not three behaviours."""
+import numpy as np
+import pytest
+
+from repro.core.pow2 import next_pow2, pad_pow2, pow2_bucket
+
+
+def test_next_pow2_values():
+    assert next_pow2(0) == 1
+    assert next_pow2(1) == 1
+    assert next_pow2(2) == 2
+    assert next_pow2(3) == 4
+    assert next_pow2(4) == 4
+    assert next_pow2(5) == 8
+    assert next_pow2(1023) == 1024
+    assert next_pow2(1024) == 1024
+    assert next_pow2(1025) == 2048
+
+
+def test_next_pow2_is_minimal_pow2_bound():
+    for n in range(0, 600):
+        p = next_pow2(n)
+        assert p >= max(n, 1)
+        assert p & (p - 1) == 0
+        if p > 1:
+            assert p // 2 < max(n, 1)  # minimality
+
+
+def test_next_pow2_rejects_negative():
+    with pytest.raises(ValueError):
+        next_pow2(-1)
+
+
+def test_pow2_bucket_caps():
+    assert pow2_bucket(1, 8) == 1
+    assert pow2_bucket(3, 8) == 4
+    assert pow2_bucket(8, 8) == 8
+    assert pow2_bucket(9, 8) == 8    # capped
+    assert pow2_bucket(1000, 16) == 16
+
+
+def test_pow2_bucket_rejects_non_pow2_cap():
+    for cap in (0, 3, 6, 12, -4):
+        with pytest.raises(ValueError):
+            pow2_bucket(4, cap)
+
+
+def test_pad_pow2_pads_with_minus_one():
+    sel = np.array([7, 2, 9], dtype=np.int64)
+    out = pad_pow2(sel)
+    assert out.dtype == sel.dtype
+    np.testing.assert_array_equal(out, [7, 2, 9, -1])
+
+
+def test_pad_pow2_identity_when_already_pow2():
+    for size in (1, 2, 4, 64):
+        sel = np.arange(size, dtype=np.int32)
+        assert pad_pow2(sel) is sel  # no copy — compiled-shape reuse
+
+
+def test_pad_pow2_empty():
+    out = pad_pow2(np.empty(0, np.int64))
+    np.testing.assert_array_equal(out, [-1])  # pow2 target is 1
+
+
+def test_pad_pow2_shape_count_is_logarithmic():
+    shapes = {pad_pow2(np.arange(n, dtype=np.int64)).shape[0]
+              for n in range(1, 129)}
+    assert shapes == {1, 2, 4, 8, 16, 32, 64, 128}
