@@ -537,6 +537,119 @@ def _compressed_wire_row(g, *, block: int, iters: int) -> dict:
     return rows
 
 
+ASYNC_SKEW_ARMS = (
+    # name, theta0, decay, bucket_k
+    ("eager", 0.0, 0.5, 0),        # theta collapses immediately; holds come
+                                   # only from owner-empty private frontiers
+    ("holding", 10.0, 0.9, 0),     # predict half holds low-priority devices
+    ("buckets", 10.0, 0.9, 8),     # held devices still run top-k residual
+                                   # vertices through the bucket kernel
+)
+
+
+def _validate_async_skew(table: dict) -> dict:
+    """Refuse to record an async_skew table that does not demonstrate the
+    claim it exists to pin.  Every async arm must (a) actually skip Gen
+    work — a "hold" that still executes its blocks is the bug this table
+    guards against, so zero skipped device-iterations is a recording
+    error, not a data point; (b) reach the same fixed point bit-for-bit
+    as BSP (sssp's min monoid is idempotent, so async reordering must be
+    invisible in the result); and (c) beat BSP per-iteration in the
+    skewed steady state (async_vs_bsp < 1.0) — otherwise the conditional
+    execution is not paying for its scheduling overhead and the table
+    would pin a regression as a baseline."""
+    for name, row in table["configs"].items():
+        if row["gen_skipped"] <= 0:
+            raise RuntimeError(
+                f"async_skew[{name}]: gen_skipped=0 — predicted holds "
+                "executed Gen anyway; refusing to record")
+        if not row["bit_identical"]:
+            raise RuntimeError(
+                f"async_skew[{name}]: async fixed point diverged from "
+                "BSP under an idempotent monoid; refusing to record")
+        if not row["async_vs_bsp"] < 1.0:
+            raise RuntimeError(
+                f"async_skew[{name}]: async_vs_bsp="
+                f"{row['async_vs_bsp']:.3f} >= 1.0 — async did not beat "
+                "BSP on the skewed graph; refusing to record")
+    return table
+
+
+def _async_skew_table(quick: bool) -> dict:
+    """Async vs BSP on a skewed power-law graph where most devices have
+    nothing useful to do most iterations.  The rmat multiset (dedup off)
+    keeps the full hub-heavy edge distribution, and sssp from 4 seed
+    sources gives owner-filtered private frontiers that stay empty on
+    non-hub devices — exactly the regime conditional Gen execution is
+    for.  Two measurements per arm: the bench-standard fixed-window
+    per-iteration steady state (ratio against BSP is the gated claim),
+    and one full run to convergence for the skipped-Gen accounting and
+    the bit-identical fixed-point check."""
+    from repro.graph import generate
+    g = generate.rmat(1_000, 64_000, seed=7, a=0.7, b=0.15, c=0.1,
+                      dedup=False)
+    prog = sssp_bf(g)
+    frontier = np.zeros(g.num_vertices, dtype=bool)
+    frontier[:4] = True
+    opts = plug.PlugOptions(block_size=1024)
+    window = 6
+    repeats = 3 if quick else 5
+
+    def _mk(model):
+        return plug.Middleware(g, prog, daemon="sharded", upper="mesh",
+                               model=model, num_shards=SHARDS, options=opts)
+
+    def _window_per_iter(mw):
+        mw.run(max_iterations=window, frontier=frontier)  # warmup: compile
+        best = float("inf")
+        for _ in range(repeats):
+            res = mw.run(max_iterations=window, frontier=frontier)
+            best = min(best, res.wall_time / max(1, res.iterations))
+        return best
+
+    bsp_per_iter = _window_per_iter(_mk("bsp"))
+    bsp_full = _mk("bsp").run(max_iterations=200, frontier=frontier)
+    if not bsp_full.converged:
+        raise RuntimeError("async_skew: BSP baseline failed to converge")
+    ref = np.asarray(bsp_full.state)
+    configs = {}
+    for name, theta0, decay, bucket_k in ASYNC_SKEW_ARMS:
+        model = plug.AsyncModel(theta0=theta0, decay=decay,
+                                bucket_k=bucket_k)
+        per_iter = _window_per_iter(_mk(model))
+        full = _mk(model).run(max_iterations=200, frontier=frontier)
+        if not full.converged:
+            raise RuntimeError(f"async_skew[{name}]: failed to converge")
+        gen_skipped = sum(r["gen_skipped"] for r in full.per_iteration)
+        gen_total = sum(r["gen_skipped"] + r["gen_run"]
+                        for r in full.per_iteration)
+        configs[name] = {
+            "theta0": theta0, "decay": decay, "bucket_k": bucket_k,
+            "per_iter_s": per_iter,
+            "async_vs_bsp": per_iter / bsp_per_iter,
+            "iterations": full.iterations,
+            "gen_skipped": int(gen_skipped),
+            "gen_total": int(gen_total),
+            "skip_fraction": gen_skipped / max(1, gen_total),
+            "bit_identical": bool(
+                np.array_equal(ref, np.asarray(full.state))),
+        }
+    table = {
+        "algorithm": "sssp_bf",
+        "graph": {"num_vertices": g.num_vertices,
+                  "num_edges": g.num_edges,
+                  "rmat": {"a": 0.7, "b": 0.15, "c": 0.1, "seed": 7,
+                           "dedup": False}},
+        "num_shards": SHARDS,
+        "num_sources": 4,
+        "window_iterations": window,
+        "bsp": {"per_iter_s": bsp_per_iter,
+                "iterations": bsp_full.iterations},
+        "configs": configs,
+    }
+    return _validate_async_skew(table)
+
+
 def run(small: bool = True, quick: bool = False,
         oocore_edges: int | None = None) -> dict:
     g = DATASETS["orkut-mini"]()
@@ -595,6 +708,7 @@ def run(small: bool = True, quick: bool = False,
         g, block=256 if quick else 1024,
         iters=iters["pagerank"] + 2)
     out["dynamic"] = _dynamic_table(quick)
+    out["async_skew"] = _async_skew_table(quick)
     # the autotune sweeps the pallas cells triggered above: chosen config
     # + the full per-config timing table, per (shape, monoid) signature —
     # auditable from BENCH_plug.json, not just the winning label
@@ -664,6 +778,15 @@ def main():
                              f"cold={c['cold_s']*1e3:.0f}ms "
                              f"({c['iterations_cold']} its)")
         print(f"dynamic ({alg}): " + "  ".join(cells))
+    ak = results.pop("async_skew")
+    for name, row in ak["configs"].items():
+        print(f"async-skew ({ak['algorithm']}, {name}): "
+              f"async {row['per_iter_s']*1e3:.1f}ms/iter vs bsp "
+              f"{ak['bsp']['per_iter_s']*1e3:.1f}ms/iter "
+              f"(ratio {row['async_vs_bsp']:.2f}x), skipped Gen on "
+              f"{row['gen_skipped']}/{row['gen_total']} device-iterations "
+              f"({row['skip_fraction']:.0%}), "
+              f"bit-identical={row['bit_identical']}")
     cw = results.pop("compressed_wire")
     for alg, row in cw.items():
         print(f"compressed-wire ({alg}): "

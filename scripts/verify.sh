@@ -24,6 +24,15 @@
 # generator's memory regression — for quick iteration on src/repro/
 # oocore/, the daemon's bind_super_shards path, and graph/generate.py.
 #
+# Fast async slice (scripts/verify.sh --async): the asynchronous
+# computation-model surface — conditional Gen execution under predicted
+# holds (zero blocks on held devices, Gen-invocation accounting),
+# priority buckets, NaN-proof priorities for non-finite identities,
+# owner-only backlog delivery across migrations, and the async rows of
+# the sharded/fault matrices — for quick iteration on the AsyncDriveLoop
+# predict/commit cadence in plug/middleware.py, the masked daemon path
+# in plug/daemons.py, and merge_partials_async in plug/uppers.py.
+#
 # Fast mutation slice (scripts/verify.sh --mutate): the dynamic-graph
 # surface — the structure-epoch bus and its five rebuild triggers, the
 # rebuild-path-equivalence matrix, the mutation log/apply/dirty-recut
@@ -66,6 +75,11 @@ fi
 if [[ "${1:-}" == "--oocore" ]]; then
     shift
     exec python -m pytest -q tests/test_oocore.py tests/test_generate.py "$@"
+fi
+
+if [[ "${1:-}" == "--async" ]]; then
+    shift
+    exec python -m pytest -q -k "async" "$@"
 fi
 
 if [[ "${1:-}" == "--mutate" ]]; then

@@ -290,6 +290,33 @@ def pad_tileset(ts: CSRTileSet, *, num_tiles: int, row_tile: int,
         eblock=pad(ts.eblock, ts.edge_tile, fill=-1))
 
 
+def src_adjacency(src, dst, weights, num_vertices: int
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Src-sorted CSR adjacency of one shard's edge list.
+
+    The gather layout of the vertex-level priority buckets: a device
+    predicted to hold still runs the out-edges of its top-k residual
+    vertices, and those edges are exactly ``dst[ptr[v]:ptr[v+1]]`` /
+    ``w[ptr[v]:ptr[v+1]]`` here — a fixed-shape slice per selected
+    vertex, so the bucket body stays one compiled shape regardless of
+    which vertices win the top-k.
+
+    Returns ``(ptr (N+1,) i32, dst (E,) i32, w (E,) f32)`` with edges
+    sorted by source.  Host-side numpy, built once at configure time.
+    """
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    if weights is None:
+        weights = np.ones(src.size, dtype=np.float32)
+    weights = np.asarray(weights, dtype=np.float32).reshape(-1)
+    order = np.argsort(src, kind="stable")
+    counts = np.bincount(src, minlength=num_vertices)
+    ptr = np.zeros(num_vertices + 1, np.int64)
+    np.cumsum(counts, out=ptr[1:])
+    return (ptr.astype(np.int32), dst[order].astype(np.int32),
+            weights[order].astype(np.float32))
+
+
 def tile_access_scores(gsrc: np.ndarray, emask: np.ndarray,
                        degrees: np.ndarray) -> np.ndarray:
     """Access-frequency proxy per edge group (CSR tile or padded block).

@@ -233,3 +233,66 @@ def csr_tile_pallas(vsrc, vaux, rowst, lsrc, seg, w, emask_f32, *,
         out_shape=out_shape,
         interpret=interpret,
     )(vsrc, vaux, rowst, lsrc, seg, w, emask_f32)
+
+
+# --------------------------------------------------------------------------
+# Vertex-level priority buckets: the skip-branch program of the masked
+# sharded daemon (DESIGN.md §3.1).  A device predicted to hold runs ONLY
+# the out-edges of its top-k residual vertices — (k × cap) edges per
+# shard, a fixed compiled shape — instead of its full gather+Gen+Merge.
+# --------------------------------------------------------------------------
+def bucket_partials(state, aux, scores, ptr, adst, aw, *,
+                    program: VertexProgram, k: int, cap: int,
+                    num_vertices: int):
+    """Gen + Merge over the top-``k`` score vertices' out-edges.
+
+    Traceable (runs inside the masked ``shard_map`` body's skip branch,
+    under ``lax.cond``).  The adjacency is the src-sorted CSR layout of
+    :func:`repro.graph.compaction.src_adjacency`, stacked per local
+    shard; each selected vertex contributes at most ``cap`` edges (a
+    hub's tail is regenerated by the device's next full refresh — the
+    backlog is never cleared by a bucket run, so capping loses nothing).
+    Only idempotent monoids may consume the result: bucket messages are
+    folded into the device's *held* copy by re-combine, which must
+    tolerate duplication.
+
+    Args:
+      state (N, K), aux (N, A): the replicated vertex table.
+      scores (N,) f32: per-vertex priority (last residual, with
+        non-frontier vertices already masked to -1); only strictly
+        positive scores run.
+      ptr (s_l, N+1) i32, adst (s_l, Ep) i32, aw (s_l, Ep) f32: the
+        local shards' src-CSR adjacency.
+    Returns ``(agg (N, K) f32, cnt (N,) i32)`` — identity / zero at
+    untouched vertices, same partials contract as the full-shard bodies.
+    """
+    monoid = program.monoid
+    s_l = ptr.shape[0]
+    ep = adst.shape[1]
+    kk = program.state_width
+    if ep == 0 or k <= 0:
+        return (jnp.full((num_vertices, kk), monoid.identity, jnp.float32),
+                jnp.zeros((num_vertices,), jnp.int32))
+    top_vals, top = jax.lax.top_k(scores, k)          # (k,)
+    vmask = top_vals > 0.0
+    start = ptr[:, top]                               # (s_l, k)
+    end = ptr[:, top + 1]
+    idx = start[..., None] + jnp.arange(cap, dtype=start.dtype)
+    valid = (idx < end[..., None]) & vmask[None, :, None]  # (s_l, k, cap)
+    flat = jnp.clip(idx, 0, ep - 1).reshape(s_l, k * cap)
+    d_ids = jnp.take_along_axis(adst, flat, axis=1)   # (s_l, k*cap)
+    wts = jnp.take_along_axis(aw, flat, axis=1)
+    src_ids = jnp.broadcast_to(top[None, :, None],
+                               (s_l, k, cap)).reshape(-1)
+    d_flat = d_ids.reshape(-1)
+    msgs = program.msg_gen(state[src_ids], state[d_flat],
+                           wts.reshape(-1, 1), aux[src_ids])  # (s_l*k*cap, K)
+    # dead slots route to an extra segment that is sliced away — the
+    # live ones merge with the same operator as every other kernel
+    vflat = valid.reshape(-1)
+    seg = jnp.where(vflat, d_flat, num_vertices)
+    agg = monoid.segment_reduce(msgs, seg, num_vertices + 1)[:num_vertices]
+    cnt = jax.ops.segment_sum(vflat.astype(jnp.int32), seg,
+                              num_vertices + 1)[:num_vertices]
+    agg = jnp.where((cnt > 0)[:, None], agg, monoid.identity)
+    return agg.astype(jnp.float32), cnt

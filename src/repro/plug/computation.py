@@ -86,7 +86,13 @@ class AsyncModel:
       holds (re-delivered on its next refresh, so no message is ever
       lost), and ``theta`` itself; see
       ``plug.middleware.AsyncDriveLoop`` and the upper system's
-      ``merge_partials_async`` cadence.
+      ``merge_partials_async`` cadence.  The cadence is split in two: a
+      cheap *predict* half (previous priority + backlog residual vs
+      ``theta``) decides before Gen which devices will hold — a
+      predicted-held device skips gather+Gen+Merge entirely
+      (``run_mask``), optionally running only its top-``bucket_k``
+      residual vertices — and the exact *commit* half certifies the
+      refresh decision on whatever fresh partials were produced.
     * the **host loop** is itself a global barrier — after its gather
       returns, every aggregate already *is* the freshest available, so
       the three hooks below degenerate to BSP's ordering by
@@ -103,14 +109,25 @@ class AsyncModel:
     barrier = False
 
     def __init__(self, theta0: float = 0.1, decay: float = 0.5,
-                 floor: float = 1e-12):
+                 floor: float = 1e-12, bucket_k: int = 0,
+                 bucket_cap: int = 32):
         if decay <= 0.0 or decay >= 1.0:
             raise ValueError(f"decay must be in (0, 1), got {decay}")
         if theta0 < 0.0 or floor < 0.0:
             raise ValueError("theta0 and floor must be non-negative")
+        if bucket_k < 0 or bucket_cap <= 0:
+            raise ValueError("bucket_k must be >= 0 and bucket_cap > 0")
         self.theta0 = float(theta0)
         self.decay = float(decay)
         self.floor = float(floor)
+        # Vertex-level priority buckets: when > 0, a device predicted to
+        # hold still runs the out-edges of its top-``bucket_k`` residual
+        # vertices (capped at ``bucket_cap`` edges each), so skew INSIDE
+        # a shard is exploited too.  Only idempotent monoids qualify
+        # (bucket messages are folded into the held copy by re-combine,
+        # which must tolerate duplication); the fused loop gates this.
+        self.bucket_k = int(bucket_k)
+        self.bucket_cap = int(bucket_cap)
 
     def prologue(self, gather):
         return None

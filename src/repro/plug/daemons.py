@@ -343,6 +343,15 @@ class ShardedDaemon(VectorizedDaemon):
         self._tile_cache: dict = {}
         self.tiles_recut = 0
         self.tilesets_reused = 0
+        # masked execution (MaskCapableDaemon): vertex-level priority
+        # buckets + Gen-invocation instrumentation.  ``instrument`` adds
+        # a host callback to the cond-guarded shard body, so the counters
+        # are honest proof a masked device never executed Gen (tests).
+        self._bucket_k = 0
+        self._bucket_cap = 32
+        self.instrument = False
+        self.gen_invocations = 0
+        self.bucket_invocations = 0
 
     def share_from(self, donor: "ShardedDaemon | None"):
         """Declares a donor whose device-placed stacked block tensors
@@ -635,15 +644,11 @@ class ShardedDaemon(VectorizedDaemon):
                                           config=self._oocore_config)
         return self.bind_shards(blocksets, mesh=mesh, axis=self.axis)
 
-    def _partials_fn(self, use_frontier: bool, per_device: bool = False):
-        key = (use_frontier, per_device)
-        try:
-            return self._partials_fns[key]
-        except KeyError:
-            pass
-        from jax.experimental.shard_map import shard_map
-        from jax.sharding import PartitionSpec as P
-
+    def _block_body(self, use_frontier: bool):
+        """The per-device block compute: gather + Gen + segmented Merge +
+        per-device combine.  ``act`` is this device's (N,) frontier (or
+        None for non-frontier programs) — frontier slicing and masking
+        policy live in the ``shard_map`` wrappers."""
         program = self.program
         monoid = program.monoid
         n = self.n
@@ -652,16 +657,13 @@ class ShardedDaemon(VectorizedDaemon):
         # so sharded and vectorized stay bit-identical per kernel
         partials_impl = BLOCK_PARTIALS[self.kernel]
 
-        def body(state, aux, active, vids, lsrc, ldst, w, emask, gsrc):
-            # local slices (S/m, nb, …); state/aux replicated; active is
-            # replicated (N,) — or this device's (1, N) backlog row when
-            # the fused async loop drives per-device frontiers
+        def compute(state, aux, act, vids, lsrc, ldst, w, emask, gsrc):
+            # local slices (S/m, nb, …); state/aux replicated
             s_l, nb, vb = vids.shape
             b = lsrc.shape[2]
             if use_frontier:
                 # same block granularity as the host path: a block with
                 # no active source contributes nothing this iteration
-                act = active[0] if per_device else active
                 blk_active = jnp.any(act[gsrc] & emask, axis=2)
                 emask = emask & blk_active[..., None]
             else:
@@ -685,45 +687,26 @@ class ShardedDaemon(VectorizedDaemon):
             return (agg[None], cnt[None],
                     blk_active.sum(axis=1).astype(jnp.int32))
 
-        spec = P(self.axis)
-        rep = P()
-        act_spec = spec if per_device else rep
-        fn = shard_map(
-            body, mesh=self.mesh,
-            in_specs=(rep, rep, act_spec, spec, spec, spec, spec, spec, spec),
-            out_specs=(spec, spec, spec), check_rep=False)
-        self._partials_fns[key] = fn
-        return fn
+        return compute
 
-    def _csr_partials_fn(self, use_frontier: bool, per_device: bool = False):
-        """The ``shard_map`` body for ``kernel="pallas"``: the fused CSR
-        tile program + per-device combine, same output contract as
-        :meth:`_partials_fn` (``blocks_run`` counts active tiles)."""
-        key = ("csr", use_frontier, per_device)
-        try:
-            return self._partials_fns[key]
-        except KeyError:
-            pass
-        from jax.experimental.shard_map import shard_map
-        from jax.sharding import PartitionSpec as P
-
+    def _csr_body(self, use_frontier: bool):
+        """The per-device CSR tile compute for ``kernel="pallas"``: the
+        fused tile program + per-device combine, same output contract as
+        :meth:`_block_body` (``blocks_run`` counts active tiles)."""
         from repro.kernels import ops as kops
 
         program = self.program
         n = self.n
         cfg = self._csr_config
 
-        def body(state, aux, active, rows, seg, lsrc, svids, w, emask,
-                 gsrc, gdst):
-            # local slices (S/m, nt, …); state/aux replicated; active is
-            # replicated (N,) — or this device's (1, N) backlog row when
-            # the fused async loop drives per-device frontiers
+        def compute(state, aux, act, rows, seg, lsrc, svids, w, emask,
+                    gsrc, gdst):
+            # local slices (S/m, nt, …); state/aux replicated
             s_l, nt, et = lsrc.shape
             if use_frontier:
                 # per-edge frontier filtering — trajectory-identical to
                 # the block path's block-granularity skipping for the
                 # idempotent monoids that drive frontiers
-                act = active[0] if per_device else active
                 em = emask & act[gsrc]
             else:
                 em = emask
@@ -745,6 +728,52 @@ class ShardedDaemon(VectorizedDaemon):
                                           num_vertices=n, config=cfg)
             return agg[None], cnt[None], tiles_run
 
+        return compute
+
+    def _partials_fn(self, use_frontier: bool, per_device: bool = False):
+        key = (use_frontier, per_device)
+        try:
+            return self._partials_fns[key]
+        except KeyError:
+            pass
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        compute = self._block_body(use_frontier)
+
+        def body(state, aux, active, *arrs):
+            # active is replicated (N,) — or this device's (1, N) backlog
+            # row when the fused async loop drives per-device frontiers
+            act = ((active[0] if per_device else active)
+                   if use_frontier else None)
+            return compute(state, aux, act, *arrs)
+
+        spec = P(self.axis)
+        rep = P()
+        act_spec = spec if per_device else rep
+        fn = shard_map(
+            body, mesh=self.mesh,
+            in_specs=(rep, rep, act_spec, spec, spec, spec, spec, spec, spec),
+            out_specs=(spec, spec, spec), check_rep=False)
+        self._partials_fns[key] = fn
+        return fn
+
+    def _csr_partials_fn(self, use_frontier: bool, per_device: bool = False):
+        key = ("csr", use_frontier, per_device)
+        try:
+            return self._partials_fns[key]
+        except KeyError:
+            pass
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        compute = self._csr_body(use_frontier)
+
+        def body(state, aux, active, *arrs):
+            act = ((active[0] if per_device else active)
+                   if use_frontier else None)
+            return compute(state, aux, act, *arrs)
+
         spec = P(self.axis)
         rep = P()
         act_spec = spec if per_device else rep
@@ -755,7 +784,148 @@ class ShardedDaemon(VectorizedDaemon):
         self._partials_fns[key] = fn
         return fn
 
-    def run_all_shards(self, state, aux, active=None, *, stacked=None):
+    # -- masked execution (MaskCapableDaemon) -----------------------------
+    def configure_buckets(self, k: int, cap: int = 32):
+        """Arms the vertex-level priority buckets of the masked path.
+
+        With ``k > 0`` a device whose ``run_mask`` slot is False still
+        runs the out-edges of its top-``k`` residual vertices, capped at
+        ``cap`` edges each (``kernels.edge_block.bucket_partials``), so
+        skew *inside* a shard is exploited while the shard holds.  The
+        src-sorted adjacency is compacted host-side once per binding and
+        stacked next to the block tensors.  Only idempotent monoids
+        qualify — bucket messages are folded into the held copy by
+        re-combine, which must tolerate duplication — so ``k`` is forced
+        to 0 otherwise.  Returns self.
+        """
+        k = int(k)
+        cap = int(cap)
+        if cap <= 0:
+            raise ValueError(f"bucket cap must be positive, got {cap}")
+        if self.program is not None and not self.program.monoid.idempotent:
+            k = 0
+        if self.n:
+            k = min(k, self.n)
+        if (k, cap) != (self._bucket_k, self._bucket_cap):
+            # masked bodies bake the bucket shape in; drop only them
+            self._partials_fns = {
+                kk: v for kk, v in self._partials_fns.items()
+                if not (isinstance(kk, tuple) and kk and kk[0] == "masked")}
+        self._bucket_k, self._bucket_cap = k, cap
+        if self._stacked is not None:
+            if k > 0 and self._blocksets and "bucket" not in self._stacked:
+                from repro.graph.compaction import src_adjacency
+
+                adjs = []
+                for bs in self._blocksets:
+                    live = bs.emask.reshape(-1)
+                    adjs.append(src_adjacency(
+                        bs.gsrc.reshape(-1)[live],
+                        bs.gdst.reshape(-1)[live],
+                        bs.weights.reshape(-1)[live], self.n))
+                ep = max(1, max(a[1].shape[0] for a in adjs))
+                ptr = np.stack([a[0] for a in adjs])
+                adst = np.stack([np.pad(a[1], (0, ep - a[1].shape[0]))
+                                 for a in adjs])
+                aw = np.stack([np.pad(a[2], (0, ep - a[2].shape[0]))
+                               for a in adjs])
+                # in-place on the SAME stacked dict: callers holding the
+                # threaded pytree (the fused loops) see the bucket arrays
+                # without re-capturing daemon.stacked
+                self._stacked["bucket"] = {"ptr": self._place_stack(ptr),
+                                           "dst": self._place_stack(adst),
+                                           "w": self._place_stack(aw)}
+            elif k == 0 and "bucket" in self._stacked:
+                del self._stacked["bucket"]
+        return self
+
+    def reset_counters(self):
+        """Zeroes the instrumentation counters (``instrument=True``)."""
+        self.gen_invocations = 0
+        self.bucket_invocations = 0
+
+    def _count_gen(self):
+        self.gen_invocations += 1
+
+    def _count_bucket(self):
+        self.bucket_invocations += 1
+
+    def _masked_partials_fn(self, use_frontier: bool, per_device: bool,
+                            csr: bool, has_bucket: bool):
+        """The cond-guarded ``shard_map`` body of the masked path.
+
+        Each device's scalar ``run_mask`` slot picks ONE branch of a
+        real XLA conditional: the full shard compute, or a skip branch
+        that costs nothing but the priority bucket (when armed) — this
+        is what makes an async hold *free* instead of
+        compute-then-discard.  For frontier-driven programs the
+        predicate also folds in the all-inactive private-frontier fast
+        path: an empty backlog row's identity output is exactly the
+        device's fresh partial, so skipping it is lossless.
+        """
+        key = ("masked", csr, use_frontier, per_device, has_bucket,
+               self._bucket_k, self._bucket_cap, bool(self.instrument))
+        try:
+            return self._partials_fns[key]
+        except KeyError:
+            pass
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.kernels.edge_block import bucket_partials
+
+        program = self.program
+        monoid = program.monoid
+        n = self.n
+        k = program.state_width
+        bucket_k, bucket_cap = self._bucket_k, self._bucket_cap
+        instrument = bool(self.instrument)
+        count_gen, count_bucket = self._count_gen, self._count_bucket
+        compute = (self._csr_body if csr else self._block_body)(use_frontier)
+        n_main = 8 if csr else 6
+
+        def body(state, aux, active, run_mask, residual, *arrs):
+            main, barrs = arrs[:n_main], arrs[n_main:]
+            act = ((active[0] if per_device else active)
+                   if use_frontier else None)
+            s_l = main[0].shape[0]
+            pred = run_mask[0]
+            if use_frontier:
+                pred = pred & jnp.any(act)
+
+            def run(_):
+                if instrument:
+                    jax.debug.callback(count_gen)
+                return compute(state, aux, act, *main)
+
+            def skip(_):
+                zeros = jnp.zeros((s_l,), jnp.int32)
+                if has_bucket:
+                    if instrument:
+                        jax.debug.callback(count_bucket)
+                    scores = (jnp.where(act, residual, -1.0)
+                              if use_frontier else residual)
+                    agg, cnt = bucket_partials(
+                        state, aux, scores, *barrs, program=program,
+                        k=bucket_k, cap=bucket_cap, num_vertices=n)
+                    return agg[None], cnt[None], zeros
+                ident = jnp.full((1, n, k), monoid.identity, jnp.float32)
+                return ident, jnp.zeros((1, n), jnp.int32), zeros
+
+            return jax.lax.cond(pred, run, skip, 0)
+
+        spec = P(self.axis)
+        rep = P()
+        act_spec = spec if per_device else rep
+        in_specs = ((rep, rep, act_spec, spec, rep)
+                    + (spec,) * (n_main + (3 if has_bucket else 0)))
+        fn = shard_map(body, mesh=self.mesh, in_specs=in_specs,
+                       out_specs=(spec, spec, spec), check_rep=False)
+        self._partials_fns[key] = fn
+        return fn
+
+    def run_all_shards(self, state, aux, active=None, *, run_mask=None,
+                       residual=None, stacked=None):
         """Gen + Merge for ALL shards as one sharded program (traceable).
 
         Args:
@@ -765,6 +935,15 @@ class ShardedDaemon(VectorizedDaemon):
             axis with each row that device's private frontier (the fused
             async loop's backlog), or None to run every block
             (non-frontier programs).
+          run_mask: optional (m,) bool sharded over the mesh axis — the
+            async predict half's verdict.  A False device's shard body
+            is skipped behind ``lax.cond``: it contributes the monoid
+            identity (zero counts, zero blocks run) — or its priority
+            bucket's partial when :meth:`configure_buckets` armed one —
+            without executing gather + Gen + Merge.
+          residual: optional replicated (N,) f32 per-vertex last state
+            change; the bucket score source (required when buckets are
+            armed and ``run_mask`` is given).
           stacked: the ``self.stacked`` pytree threaded through as jit
             arguments (the fused drive loop does this so the block
             tensors are not baked into the compiled step as constants).
@@ -780,14 +959,29 @@ class ShardedDaemon(VectorizedDaemon):
         use_frontier = active is not None
         if active is None:
             active = jnp.zeros((1,), jnp.bool_)  # placeholder, unread
-        if self.kernel == "pallas" and "csr" in st:
-            fn = self._csr_partials_fn(use_frontier, per_device)
-            c = st["csr"]
-            return fn(state, aux, active, c["rows"], c["seg"], c["lsrc"],
-                      c["svids"], c["w"], c["emask"], c["gsrc"], c["gdst"])
-        fn = self._partials_fn(use_frontier, per_device)
-        return fn(state, aux, active, st["vids"], st["lsrc"], st["ldst"],
-                  st["weights"], st["emask"], st["gsrc"])
+        csr = self.kernel == "pallas" and "csr" in st
+        c = st["csr"] if csr else None
+        main = ((c["rows"], c["seg"], c["lsrc"], c["svids"], c["w"],
+                 c["emask"], c["gsrc"], c["gdst"]) if csr else
+                (st["vids"], st["lsrc"], st["ldst"], st["weights"],
+                 st["emask"], st["gsrc"]))
+        if run_mask is None:
+            fn = (self._csr_partials_fn if csr
+                  else self._partials_fn)(use_frontier, per_device)
+            return fn(state, aux, active, *main)
+        bucket = st.get("bucket") if isinstance(st, dict) else None
+        has_bucket = (bucket is not None and self._bucket_k > 0
+                      and self.program.monoid.idempotent)
+        if has_bucket and residual is None:
+            raise ValueError("run_all_shards with armed buckets needs the "
+                             "per-vertex residual for the bucket scores")
+        if residual is None:
+            residual = jnp.zeros((1,), jnp.float32)  # placeholder, unread
+        fn = self._masked_partials_fn(use_frontier, per_device, csr,
+                                      has_bucket)
+        barrs = (bucket["ptr"], bucket["dst"], bucket["w"]) if has_bucket \
+            else ()
+        return fn(state, aux, active, run_mask, residual, *main, *barrs)
 
 
 class _StreamingDaemon:

@@ -47,6 +47,7 @@ this class.
 """
 from __future__ import annotations
 
+import inspect
 import time
 
 import jax
@@ -66,8 +67,8 @@ from repro.plug.computation import BSP, GAS, AsyncModel, get_model
 from repro.plug.daemons import get_daemon
 from repro.plug.epoch import StructureEpoch, StructureEpochBus
 from repro.plug.protocols import (DevicePartialUpper, ElasticUpper,
-                                  OutOfCoreCapable, PlugOptions,
-                                  PriorityAsyncModel, Result,
+                                  MaskCapableDaemon, OutOfCoreCapable,
+                                  PlugOptions, PriorityAsyncModel, Result,
                                   ShardCapableDaemon)
 from repro.plug.uppers import get_upper_system
 
@@ -1117,6 +1118,38 @@ class HostDriveLoop:
         ]
 
 
+def _rec_value(v):
+    """Host-native view of an already-fetched record value: numpy
+    scalars/arrays become Python scalars/lists so the per-iteration
+    records stay JSON-serializable without per-key device syncs."""
+    if isinstance(v, dict):
+        return {k: _rec_value(x) for k, x in v.items()}
+    if isinstance(v, np.ndarray):
+        return v.item() if v.ndim == 0 else v.tolist()
+    if isinstance(v, np.generic):
+        return v.item()
+    return v
+
+
+def _device_source_masks(partitions, m: int, n: int) -> np.ndarray:
+    """(m, N) bool: which source vertices device ``i`` owns edges of.
+
+    Shards are laid out device-major over the mesh axis (``migrate``
+    re-sorts ``partitions`` that way), so device ``i`` holds shards
+    ``[i*cap, (i+1)*cap)``.  Used to deliver a migrated/mutated backlog
+    only to the device that can actually generate the source's messages
+    — a source no device owns (isolated vertex) matters to nobody.
+    """
+    masks = np.zeros((m, n), dtype=bool)
+    cap = len(partitions) // m
+    for i in range(m):
+        for p in partitions[i * cap:(i + 1) * cap]:
+            src = np.asarray(p.src)
+            if src.size:
+                masks[i, np.unique(src)] = True
+    return masks
+
+
 class _FusedLoopBase:
     """Shared scaffolding of the device-resident fused drive loops.
 
@@ -1196,12 +1229,14 @@ class _FusedLoopBase:
                              f"{active0.shape}")
         active = jax.device_put(active0, rep)
         carry = self._init_carry(state, active)
-        stacked = mw.daemon.stacked
         if self._step is None or self._epoch_seen != mw.epochs.version:
             # first run, or the structure advanced between runs
             # (rebalance()/apply_mutations()): recompile against it
             self._step = self._build_step()
             self._epoch_seen = mw.epochs.version
+        # captured AFTER _build_step: building the async step may arm
+        # priority buckets, which adds their adjacency to the stacked dict
+        stacked = mw.daemon.stacked
         blocks_total = int(sum(bs.num_blocks for bs in mw.blocksets))
         per_iter: list[dict] = []
         t0 = time.perf_counter()
@@ -1220,8 +1255,8 @@ class _FusedLoopBase:
                 t_reb = time.perf_counter()
                 carry, aux_dev = self._adopt_epoch(carry, aux_dev,
                                                    init_fn)
-                stacked = mw.daemon.stacked
                 self._step = self._build_step()  # new structure → new program
+                stacked = mw.daemon.stacked
                 self._epoch_seen = mw.epochs.version
                 blocks_total = int(sum(bs.num_blocks
                                        for bs in mw.blocksets))
@@ -1233,14 +1268,19 @@ class _FusedLoopBase:
             carry, done, n_active, blocks_run, extra = self._advance(
                 carry, aux_dev, jnp.int32(it), stacked)
             mw.stats.rounds_total += 1
-            shard_blocks = [int(x) for x in jax.device_get(blocks_run)]
+            # ONE host sync per iteration: every record scalar (including
+            # whatever the subclass put in extra) rides the same fetch —
+            # per-key float()/int() casts would each block on the device
+            done, n_active, blocks_run, extra = jax.device_get(
+                (done, n_active, blocks_run, extra))
+            shard_blocks = [int(x) for x in blocks_run]
             rec = {"iteration": it, "fused": True,
                    "blocks_total": blocks_total,
                    "blocks_run": int(sum(shard_blocks)),
                    "shard_blocks_run": shard_blocks,
                    "active": int(n_active)}
             rec.update(ev)
-            rec.update(extra)
+            rec.update({k: _rec_value(v) for k, v in extra.items()})
             per_iter.append(rec)
             if bool(done):
                 converged = True
@@ -1522,11 +1562,36 @@ class AsyncDriveLoop(_FusedLoopBase):
       0 the moment the frontier drains, forcing the tail of the run
       into barriered (BSP-equivalent) steps.
 
+    The cadence is split so a hold is *free* instead of
+    compute-then-discard:
+
+    * **predict** (pre-Gen, cheap): from the previous iteration's
+      committed priority, the per-vertex residual of the last Apply,
+      and theta, each device estimates whether its refresh could
+      possibly commit.  ``est = max(prev_pri, max residual over
+      backlogged sources)`` can only over-estimate the commit half's
+      priority (states move monotonically toward the fixed point for
+      the idempotent monoids that drive frontiers), so predicting a
+      hold is safe — and a predicted-held device never runs Gen: the
+      daemon's ``run_mask`` skips gather+Gen+Merge behind ``lax.cond``
+      (priority buckets excepted), and ``merge_partials_async``
+      consumes the mask so the skipped device's held copy stays
+      authoritative.
+    * **commit** (post-Gen, exact): the existing refresh decision on
+      whatever fresh partials were produced, unchanged — convergence
+      certification still happens on real data, and the carried
+      ``prev_pri`` is only updated from committed priorities.
+
+    Liveness: theta decays every iteration, so a held device's
+    ``prev_pri`` eventually clears it and the device re-runs; the
+    mispredict cost is one extra hold iteration, never a lost update
+    (the backlog persists until an actual refresh commits).
+
     Convergence is only reported on an iteration where every device
     refreshed and no backlog is pending, so a drained frontier under
     staleness can never terminate the run early.  Host traffic per
     iteration stays O(1) scalars (plus the tiny per-shard blocks-run
-    vector), exactly as in :class:`DriveLoop`.
+    vector and the (m,) run mask), exactly as in :class:`DriveLoop`.
     """
 
     def _build_step(self):
@@ -1535,25 +1600,88 @@ class AsyncDriveLoop(_FusedLoopBase):
         model = mw.model
         decay = float(model.decay)
         floor = float(model.floor)
+        m = daemon.m
         use_frontier = (mw.program.frontier_driven
                         and mw.options.frontier_block_skipping)
+        # Feature-detect the free-hold fast path: the daemon must take a
+        # run_mask (MaskCapableDaemon) AND the upper's async merge must
+        # consume it — a custom component missing either keeps the
+        # run-everything cadence (correct, just not skipping work).
+        maskable = (
+            isinstance(daemon, MaskCapableDaemon)
+            and "run_mask" in inspect.signature(
+                upper.merge_partials_async).parameters)
+        src_masks = None
+        if maskable:
+            daemon.configure_buckets(
+                int(getattr(model, "bucket_k", 0) or 0),
+                int(getattr(model, "bucket_cap", 32) or 32))
+            if use_frontier:
+                # private frontiers for real: a newly-active source is
+                # delivered only to the device owning its edges, so a
+                # device with no owned work has an EMPTY backlog row and
+                # the all-inactive fast path skips its Gen outright.
+                # Trajectory-identical to the broadcast — a non-owner
+                # has no edges from the source and generates nothing.
+                src_masks = jax.device_put(
+                    _device_source_masks(mw.partitions, m, mw.n),
+                    jax.sharding.NamedSharding(
+                        mw.upper.mesh,
+                        jax.sharding.PartitionSpec(mw.upper.axis)))
 
-        def step(state, active, backlog, held_p, held_c, theta, aux, it,
-                 stacked):
+        def step(state, active, backlog, held_p, held_c, theta, prev_pri,
+                 residual, aux, it, stacked):
             if use_frontier:
                 # deliver each device its private backlog ∪ the new
                 # frontier; consumed below when the device refreshes
-                backlog = backlog | active[None, :]
+                new_work = (active[None, :] & src_masks
+                            if src_masks is not None else active[None, :])
+                backlog = backlog | new_work
+            if maskable:
+                # predict half: a device whose estimated priority cannot
+                # clear theta holds WITHOUT running Gen.  The estimate
+                # over-approximates the commit priority — the last
+                # committed one, raised by the largest residual among
+                # this device's backlogged sources — so predicted holds
+                # are safe and mispredicts only cost one hold iteration
+                # (theta decays under prev_pri eventually: liveness).
+                est = prev_pri
+                if use_frontier:
+                    est = jnp.maximum(est, jnp.max(
+                        jnp.where(backlog, residual[None, :], 0.0),
+                        axis=1))
+                run_mask = (est >= theta) | (theta <= floor)
                 fresh_p, fresh_c, blocks_run = daemon.run_all_shards(
-                    state, aux, backlog, stacked=stacked)
+                    state, aux, backlog if use_frontier else None,
+                    run_mask=run_mask, residual=residual, stacked=stacked)
+                (agg, cnt, held_p, held_c, refreshed,
+                 pri) = upper.merge_partials_async(
+                    fresh_p, fresh_c, held_p, held_c, theta, floor,
+                    run_mask)
+                # only committed priorities feed the next prediction — a
+                # skipped device's identity output says nothing new
+                prev_pri = jnp.where(run_mask, pri, prev_pri)
+                executed = (run_mask & backlog.any(axis=1)
+                            if use_frontier else run_mask)
             else:
                 fresh_p, fresh_c, blocks_run = daemon.run_all_shards(
-                    state, aux, None, stacked=stacked)
-            agg, cnt, held_p, held_c, refreshed = upper.merge_partials_async(
-                fresh_p, fresh_c, held_p, held_c, theta, floor)
+                    state, aux, backlog if use_frontier else None,
+                    stacked=stacked)
+                out = upper.merge_partials_async(
+                    fresh_p, fresh_c, held_p, held_c, theta, floor)
+                agg, cnt, held_p, held_c, refreshed = out[:5]
+                if len(out) > 5:
+                    prev_pri = jnp.where(refreshed, out[5], prev_pri)
+                run_mask = jnp.ones((m,), jnp.bool_)
+                executed = run_mask
             if use_frontier:
                 backlog = backlog & ~refreshed[:, None]
             new_state, new_active = apply_fn(state, agg, cnt > 0, aux, it)
+            # per-vertex residual of this Apply — next iteration's
+            # predict signal and the bucket score source (NaN/±inf from
+            # non-finite identities canonicalize to finite)
+            residual = jnp.nan_to_num(
+                jnp.max(jnp.abs(new_state - state), axis=1), nan=0.0)
             n_active = new_active.sum()
             pending = (backlog.any() if use_frontier
                        else jnp.asarray(False))
@@ -1563,8 +1691,11 @@ class AsyncDriveLoop(_FusedLoopBase):
             # moment the frontier drains: the tail of the run is
             # barriered, so convergence is certified on fresh data
             theta = jnp.where(n_active == 0, 0.0, theta * decay)
+            n_executed = executed.sum()
             return (new_state, new_active, backlog, held_p, held_c, theta,
-                    done, n_active, refreshed.sum(), blocks_run)
+                    prev_pri, residual, done, n_active, refreshed.sum(),
+                    n_executed, jnp.int32(m) - n_executed, run_mask,
+                    blocks_run)
 
         return jax.jit(step)
 
@@ -1583,8 +1714,16 @@ class AsyncDriveLoop(_FusedLoopBase):
                     np.float32), shard)
         held_c = jax.device_put(np.zeros((m, mw.n), np.int32), shard)
         backlog = jax.device_put(np.zeros((m, mw.n), dtype=bool), shard)
+        rep = jax.sharding.NamedSharding(mw.upper.mesh,
+                                         jax.sharding.PartitionSpec())
+        # predict-half state: prev_pri at float-max forces every device
+        # to run on iteration 1 (no committed priority exists yet);
+        # residual zero is exact (nothing has moved)
+        prev_pri = jax.device_put(
+            np.full((m,), np.finfo(np.float32).max, np.float32), shard)
+        residual = jax.device_put(np.zeros(mw.n, np.float32), rep)
         return (state, active, backlog, held_p, held_c,
-                jnp.float32(mw.model.theta0))
+                jnp.float32(mw.model.theta0), prev_pri, residual)
 
     def _migrate_carry(self, carry):
         """Survivor-mesh re-placement of the async carry.
@@ -1594,30 +1733,38 @@ class AsyncDriveLoop(_FusedLoopBase):
         re-initialized for the new axis length m': held partials restart
         at the monoid identity — the next merge then consumes every
         device's fresh partials, i.e. one barriered step, so nothing a
-        device was holding is lost — and every survivor's new backlog is
-        the union of all old backlogs: a message suppressed during a
-        hold on ANY old device (dead ones included) is re-delivered
-        everywhere.  Re-delivery may recompute work but never loses an
-        update, which is what keeps the migrated fixed point exact.
-        ``theta`` carries over so the priority schedule resumes where it
-        was.
+        device was holding is lost — and the union of all old backlogs
+        (dead devices' included) is re-delivered, each source ONLY to
+        the survivor that owns its edges after the re-partition: a
+        non-owner has no edges from the source, so running it there
+        generates nothing — broadcasting was pure wasted Gen work.
+        Re-delivery may recompute work but never loses an update, which
+        is what keeps the migrated fixed point exact.  ``theta``
+        carries over so the priority schedule resumes where it was;
+        ``prev_pri`` restarts at float-max (held copies restarted at
+        identity, so every survivor must run before it may hold again).
         """
         mw = self.mw
-        state, active, backlog, held_p, held_c, theta = carry
+        state, active, backlog, held_p, held_c, theta = carry[:6]
         state, active = mw.upper.migrate((state, active))
         merged_backlog = np.asarray(jax.device_get(backlog)).any(axis=0)
         m = mw.daemon.m
         shard = jax.sharding.NamedSharding(
             mw.upper.mesh, jax.sharding.PartitionSpec(mw.upper.axis))
+        masks = _device_source_masks(mw.partitions, m, mw.n)
         backlog = jax.device_put(
-            np.ascontiguousarray(
-                np.broadcast_to(merged_backlog, (m, mw.n))), shard)
+            np.ascontiguousarray(merged_backlog[None, :] & masks), shard)
         held_p = jax.device_put(
             np.full((m, mw.n, mw.k), mw.program.monoid.identity,
                     np.float32), shard)
         held_c = jax.device_put(np.zeros((m, mw.n), np.int32), shard)
+        rep = jax.sharding.NamedSharding(mw.upper.mesh,
+                                         jax.sharding.PartitionSpec())
+        prev_pri = jax.device_put(
+            np.full((m,), np.finfo(np.float32).max, np.float32), shard)
+        residual = jax.device_put(np.zeros(mw.n, np.float32), rep)
         return (state, active, backlog, held_p, held_c,
-                jnp.float32(float(theta)))
+                jnp.float32(float(theta)), prev_pri, residual)
 
     def _mutate_carry(self, carry, state0, ep, rep):
         """Mid-run mutation under the async model.  Held partials were
@@ -1626,10 +1773,12 @@ class AsyncDriveLoop(_FusedLoopBase):
         barriered all-fresh step.  Incremental: state and theta carry
         over, and the dirty frontier joins both the shared frontier and
         every device's backlog (a source suppressed by a hold is
-        re-delivered against the mutated graph).  Cold: full async
+        re-delivered against the mutated graph — delivered only to the
+        device owning the source's edges in the re-partitioned graph,
+        exactly as :meth:`_migrate_carry` does).  Cold: full async
         reset on the new graph."""
         mw = self.mw
-        state, active, backlog, held_p, held_c, theta = carry
+        state, active, backlog, held_p, held_c, theta = carry[:6]
         m = mw.daemon.m
         shard = jax.sharding.NamedSharding(
             mw.upper.mesh, jax.sharding.PartitionSpec(mw.upper.axis))
@@ -1640,9 +1789,15 @@ class AsyncDriveLoop(_FusedLoopBase):
         if ep.meta.get("incremental"):
             fr = np.asarray(ep.meta["frontier"], dtype=bool)
             active = jnp.logical_or(active, jax.device_put(fr, rep))
-            backlog_host = np.asarray(jax.device_get(backlog)) | fr[None, :]
+            # merged across old rows because the mutation re-partitioned
+            # the graph (a source's owner may have moved), then masked
+            # to the new owners — trajectory-identical to a broadcast,
+            # since a non-owner generates no messages for the source
+            masks = _device_source_masks(mw.partitions, m, mw.n)
+            merged = (np.asarray(jax.device_get(backlog)).any(axis=0)
+                      | fr)
             backlog = jax.device_put(
-                np.ascontiguousarray(backlog_host), shard)
+                np.ascontiguousarray(merged[None, :] & masks), shard)
             theta = jnp.float32(float(theta))
         else:
             state = jax.device_put(state0, rep)
@@ -1650,12 +1805,22 @@ class AsyncDriveLoop(_FusedLoopBase):
             backlog = jax.device_put(np.zeros((m, mw.n), dtype=bool),
                                      shard)
             theta = jnp.float32(mw.model.theta0)
-        return (state, active, backlog, held_p, held_c, theta)
+        prev_pri = jax.device_put(
+            np.full((m,), np.finfo(np.float32).max, np.float32), shard)
+        residual = jax.device_put(np.zeros(mw.n, np.float32), rep)
+        return (state, active, backlog, held_p, held_c, theta, prev_pri,
+                residual)
 
     def _advance(self, carry, aux, it, stacked):
-        (state, active, backlog, held_p, held_c, theta, done, n_active,
-         n_refreshed, blocks_run) = self._step(*carry, aux, it, stacked)
-        extra = {"async": True, "refreshed": int(n_refreshed),
-                 "devices": self.mw.daemon.m, "theta": float(theta)}
-        return ((state, active, backlog, held_p, held_c, theta),
-                done, n_active, blocks_run, extra)
+        (state, active, backlog, held_p, held_c, theta, prev_pri,
+         residual, done, n_active, n_refreshed, n_executed, gen_skipped,
+         run_mask, blocks_run) = self._step(*carry, aux, it, stacked)
+        # record values stay device-resident here — the base loop's
+        # single per-iteration device_get fetches them with done/active,
+        # instead of one blocking sync per float()/int() cast
+        extra = {"async": True, "refreshed": n_refreshed,
+                 "devices": self.mw.daemon.m, "theta": theta,
+                 "gen_run": n_executed, "gen_skipped": gen_skipped,
+                 "run_mask": run_mask}
+        return ((state, active, backlog, held_p, held_c, theta, prev_pri,
+                 residual), done, n_active, blocks_run, extra)

@@ -136,6 +136,52 @@ class ShardCapableDaemon(Protocol):
 
 
 @runtime_checkable
+class MaskCapableDaemon(Protocol):
+    """Optional daemon capability: per-device conditional Gen execution.
+
+    The fused async drive loop's *predict* half decides before Gen which
+    devices will hold this iteration; a daemon exposing this capability
+    (``ShardedDaemon`` does) accepts that verdict as a per-device
+    ``run_mask`` in ``run_all_shards`` and makes the hold **free**: a
+    masked device's shard body is guarded by ``lax.cond`` and
+    contributes the monoid identity (zero counts, zero blocks run)
+    without executing gather + Gen + Merge.  For frontier-driven
+    programs the same guard doubles as the all-inactive private-frontier
+    fast path — a device whose backlog row is empty skips the body and
+    its identity output *is* its exact fresh partial.
+
+    ``configure_buckets`` arms the vertex-level priority buckets: with
+    ``k > 0`` (idempotent monoids only) a masked device still runs the
+    out-edges of its top-``k`` residual vertices, capped at ``cap``
+    edges each, so skew *inside* a shard is exploited even while the
+    shard holds.  The commit half folds those bucket partials into the
+    held copy with the monoid's combine.
+
+    The middleware feature-detects this protocol (on top of
+    :class:`ShardCapableDaemon`); daemons without it run the async loop
+    in its original run-everything form — nothing else changes.
+    """
+
+    mesh: object
+    stacked: object
+
+    def configure_buckets(self, k: int, cap: int = 32):
+        """Enables/disables priority buckets; returns self."""
+        ...
+
+    def run_all_shards(self, state, aux, active=None, *, run_mask=None,
+                       residual=None, stacked=None):
+        """As :meth:`ShardCapableDaemon.run_all_shards`, plus:
+
+        ``run_mask`` — (m,) bool sharded over the mesh axis; a False
+        device skips its shard body entirely (identity partials, zero
+        counts/blocks).  ``residual`` — replicated (N,) f32 per-vertex
+        last state change, the priority-bucket score source (unused when
+        buckets are off)."""
+        ...
+
+
+@runtime_checkable
 class OutOfCoreCapable(Protocol):
     """Optional daemon capability: graphs bigger than the mesh's HBM.
 

@@ -335,8 +335,8 @@ class MeshUpperSystem(HostUpperSystem):
         return self._pmerge_fn(partials, counts)
 
     def merge_partials_async(self, fresh_p, fresh_c, held_p, held_c,
-                             theta, floor):
-        """Async merge cadence: the fused *async* drive loop's upper half.
+                             theta, floor, run_mask=None):
+        """Async merge cadence: the fused *async* drive loop's commit half.
 
         Decides, per device, whether this round's collective consumes
         the device's fresh partial or the stale one it last shipped:
@@ -346,16 +346,29 @@ class MeshUpperSystem(HostUpperSystem):
            fill empty segments with ±inf, which is merge-equivalent to
            the identity but must not register as priority);
         2. each device's priority is how far its fresh contribution
-           moved from its held copy (L∞ over values and counts);
+           moved from its held copy (L∞ over values and counts) — NaN
+           distances (non-finite identity minus itself) canonicalize to
+           0, never to a silent never-refresh;
         3. devices at or above ``theta`` refresh — all of them, once
            ``theta`` has decayed to ``floor`` — the rest hold;
         4. the chosen partials reduce through the same collective
            :meth:`merge_partials` uses.
 
+        ``run_mask`` (m,) bool is the predict half's verdict: a device
+        predicted to hold skipped Gen entirely, so its fresh row is not
+        a real aggregate — its held copy is authoritative and it can
+        never refresh this round.  For idempotent monoids the skipped
+        device's fresh row may still carry a vertex-level priority
+        *bucket* partial (top-k residual vertices computed despite the
+        hold); that is folded into the held copy with
+        ``monoid.combine`` — a no-op when the bucket is identity —
+        so bucket messages reach the collective without a full refresh.
+
         Traceable (called inside the fused step's jit).  Returns
-        ``(agg, cnt, held_p, held_c, refreshed)``: the merged
-        aggregate/counts, the next iteration's held copies, and the
-        (m,) bool refresh mask.
+        ``(agg, cnt, held_p, held_c, refreshed, pri)``: the merged
+        aggregate/counts, the next iteration's held copies, the (m,)
+        bool refresh mask, and the (m,) f32 priorities (the predict
+        half's estimate source for the next iteration).
         """
         import jax.numpy as jnp
 
@@ -364,15 +377,34 @@ class MeshUpperSystem(HostUpperSystem):
                              "only; compressed merges take the classic path")
         ident = self.monoid.identity
         fresh_p = jnp.where((fresh_c > 0)[..., None], fresh_p, ident)
-        pri = jnp.max(jnp.abs(fresh_p - held_p), axis=(1, 2))
+        # |inf - inf| = NaN for non-finite identities; NaN >= theta is
+        # silently False, which would pin the device stale until the
+        # theta floor collapse.  nan→0 is exact (both sides identity ⇒
+        # nothing moved); ±inf clamps to float32 max, keeping pri
+        # finite for the predict half's carried estimate.
+        diff = jnp.nan_to_num(jnp.abs(fresh_p - held_p), nan=0.0)
+        pri = jnp.max(diff, axis=(1, 2))
         pri = jnp.maximum(
             pri, jnp.max(jnp.abs(fresh_c - held_c).astype(jnp.float32),
                          axis=1))
-        refreshed = (pri >= theta) | (theta <= floor)
-        held_p = jnp.where(refreshed[:, None, None], fresh_p, held_p)
-        held_c = jnp.where(refreshed[:, None], fresh_c, held_c)
+        if run_mask is None:
+            run_mask = jnp.ones(pri.shape, jnp.bool_)
+        refreshed = ((pri >= theta) | (theta <= floor)) & run_mask
+        if self.monoid.idempotent:
+            # fold skipped devices' bucket partials into the held copy
+            # (combine with identity where no bucket ran — a no-op)
+            bucket_p = jnp.where(run_mask[:, None, None], ident, fresh_p)
+            bucket_c = jnp.where(run_mask[:, None], 0, fresh_c)
+            hold_p = self.monoid.combine(held_p, bucket_p)
+            hold_c = jnp.maximum(held_c, bucket_c)
+        else:
+            # sum is not duplication-tolerant: a held device's copy is
+            # carried verbatim, and its (identity) fresh row is dropped
+            hold_p, hold_c = held_p, held_c
+        held_p = jnp.where(refreshed[:, None, None], fresh_p, hold_p)
+        held_c = jnp.where(refreshed[:, None], fresh_c, hold_c)
         agg, cnt = self.merge_partials(held_p, held_c)
-        return agg, cnt, held_p, held_c, refreshed
+        return agg, cnt, held_p, held_c, refreshed, pri
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,369 @@
+"""Async predict/commit cadence: a hold must actually skip work.
+
+Covers the acceptance surface of the free-hold fast path: a device the
+predict half marks held executes ZERO blocks (property-tested across
+theta/decay/seeds, including bsp-degenerate thresholds, drained
+frontiers, and migration boundaries), the daemon-level Gen-invocation
+counter agrees with the driver's ``gen_run`` accounting, the
+``merge_partials_async`` priority is NaN-proof for non-finite monoid
+identities (min/sssp regression), migrated/mutated backlogs are
+delivered only to the device owning the source's edges, and priority
+buckets keep the fixed point bit-exact for idempotent monoids.
+"""
+import os
+
+# Must precede jax backend init (collection-time import, before any test
+# body runs) — the sharded daemon wants > 1 host device.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses  # noqa: E402
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+try:  # pragma: no cover - exercised via either branch
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, strategies as st
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import plug  # noqa: E402
+from repro.core.template import Monoid  # noqa: E402
+from repro.graph import generate  # noqa: E402
+from repro.graph.algorithms import pagerank, sssp_bf  # noqa: E402
+from repro.plug.middleware import _device_source_masks  # noqa: E402
+
+BLOCK = 256
+SHARDS = 8
+REF_MAX_IT = 300
+
+_graph_cache: dict = {}
+
+
+def _graph():
+    if "g" not in _graph_cache:
+        _graph_cache["g"] = generate.rmat(256, 2048, seed=9)
+    return _graph_cache["g"]
+
+
+def _mw(prog, g, *, model, kills=(), instrument=False, num_shards=SHARDS):
+    mw = plug.Middleware(
+        g, prog, daemon="sharded", upper="mesh", model=model,
+        num_shards=num_shards,
+        failures=plug.FailureSchedule(kills=kills) if kills else None,
+        options=plug.PlugOptions(block_size=BLOCK))
+    if instrument:
+        mw.daemon.instrument = True
+    return mw
+
+
+def _assert_holds_ran_nothing(res, num_shards=SHARDS):
+    """The free-hold invariant on a finished run's records: every device
+    whose run_mask slot was False executed zero blocks that iteration.
+    Returns the total number of (iteration, device) holds seen."""
+    holds = 0
+    for r in res.per_iteration:
+        if "run_mask" not in r:
+            continue
+        mask = r["run_mask"]
+        m = len(mask)
+        cap = num_shards // m
+        for i, ran in enumerate(mask):
+            if not ran:
+                holds += 1
+                blocks = sum(r["shard_blocks_run"][i * cap:(i + 1) * cap])
+                assert blocks == 0, (
+                    f"held device {i} ran {blocks} blocks at iteration "
+                    f"{r['iteration']}")
+        assert r["gen_skipped"] + r["gen_run"] == m
+    return holds
+
+
+# --------------------------------------------------------------------------
+# satellite: property test — predicted holds execute zero blocks
+# --------------------------------------------------------------------------
+@settings(max_examples=6, deadline=None)
+@given(st.floats(min_value=0.5, max_value=20.0),
+       st.floats(min_value=0.3, max_value=0.9),
+       st.integers(min_value=0, max_value=3))
+def test_predicted_hold_executes_zero_blocks(theta0, decay, seed):
+    """Property: across thresholds, decay rates, and graphs, a device
+    the predict half holds contributes zero shard blocks — and the
+    run still reaches the bit-exact reference fixed point."""
+    g = generate.rmat(200, 1600, seed=seed)
+    prog = sssp_bf(g)
+    mw = _mw(prog, g, model=plug.AsyncModel(theta0=theta0, decay=decay))
+    assert mw._fused_kind == "async"
+    res = mw.run(max_iterations=REF_MAX_IT)
+    assert res.converged
+    _assert_holds_ran_nothing(res)
+    ref, _ = plug.run_reference(g, prog, max_iterations=REF_MAX_IT)
+    np.testing.assert_array_equal(ref, res.state)
+
+
+def test_high_theta_actually_holds_and_skips():
+    """The skewed-threshold regime the bench records: holds happen, and
+    every one of them skipped its Gen (nonzero gen_skipped totals).
+    Slow decay is what lets the predict half hold — a committed
+    priority stays under theta for several iterations."""
+    g = _graph()
+    prog = sssp_bf(g)
+    mw = _mw(prog, g, model=plug.AsyncModel(theta0=10.0, decay=0.9))
+    res = mw.run(max_iterations=REF_MAX_IT)
+    assert res.converged
+    holds = _assert_holds_ran_nothing(res)
+    assert holds > 0
+    assert sum(r["gen_skipped"] for r in res.per_iteration) > 0
+    ref, _ = plug.run_reference(g, prog, max_iterations=REF_MAX_IT)
+    np.testing.assert_array_equal(ref, res.state)
+
+
+def test_gen_invocation_counter_matches_driver_accounting():
+    """Daemon-level ground truth: the instrumented Gen callback fires
+    exactly ``gen_run`` times per iteration — a predicted-held device's
+    cond branch never invoked the shard body at all."""
+    g = _graph()
+    prog = sssp_bf(g)
+    mw = _mw(prog, g, model=plug.AsyncModel(theta0=10.0, decay=0.5),
+             instrument=True)
+    mw.daemon.reset_counters()
+    res = mw.run(max_iterations=REF_MAX_IT)
+    jax.effects_barrier()
+    assert res.converged
+    expected = sum(r["gen_run"] for r in res.per_iteration)
+    assert mw.daemon.gen_invocations == expected
+    assert sum(r["gen_skipped"] for r in res.per_iteration) > 0
+
+
+def test_bsp_degenerate_threshold_never_holds():
+    """theta0 = 0 collapses the predict half: run_mask stays all-True
+    (no device ever *holds*) and the trajectory is the barriered one
+    bit for bit.  Gen may still be skipped — by the all-inactive fast
+    path on devices whose private (owner-delivered) frontier drained —
+    which is free work the barriered loop also wouldn't have done."""
+    g = _graph()
+    prog = sssp_bf(g)
+    mw = _mw(prog, g, model=plug.AsyncModel(theta0=0.0, decay=0.5),
+             instrument=True)
+    mw.daemon.reset_counters()
+    res = mw.run(max_iterations=REF_MAX_IT)
+    jax.effects_barrier()
+    assert res.converged
+    assert all(all(r["run_mask"]) for r in res.per_iteration)
+    _assert_holds_ran_nothing(res)
+    assert mw.daemon.gen_invocations == sum(
+        r["gen_run"] for r in res.per_iteration)
+    bsp = _mw(prog, g, model="bsp").run(max_iterations=REF_MAX_IT)
+    np.testing.assert_array_equal(res.state, bsp.state)
+
+
+def test_drained_frontier_device_skips_for_free():
+    """A device whose private backlog row drained is skipped by the
+    all-inactive fast path even when its run_mask slot is True — and
+    the skip branch's identity output IS the exact fresh partial (every
+    edge would have been frontier-masked anyway), so the commit half
+    may treat it as a normal fresh run."""
+    g = _graph()
+    prog = sssp_bf(g)
+    mw = _mw(prog, g, model="async", instrument=True)
+    daemon = mw.daemon
+    state, aux = prog.init(g)
+    m = daemon.m
+    # per-device frontiers: device 0's row drained, the rest all-active
+    backlog = np.ones((m, g.num_vertices), dtype=bool)
+    backlog[0, :] = False
+    run_mask = np.ones(m, dtype=bool)
+    daemon.reset_counters()
+    p, c, blocks = daemon.run_all_shards(
+        jnp.asarray(state), jnp.asarray(aux), jnp.asarray(backlog),
+        run_mask=jnp.asarray(run_mask),
+        residual=jnp.zeros(g.num_vertices, jnp.float32))
+    jax.block_until_ready(c)
+    jax.effects_barrier()
+    assert daemon.gen_invocations == m - 1  # device 0 never ran Gen
+    p, c = np.asarray(p), np.asarray(c)
+    cap = len(mw.partitions) // m
+    assert sum(np.asarray(blocks)[0:cap]) == 0
+    # identity output == what a full frontier-masked run would produce
+    assert np.all(c[0] == 0)
+    assert np.all(p[0] == prog.monoid.identity)
+    # the other devices' partials are untouched by the masking machinery
+    p_ref, c_ref, _ = daemon.run_all_shards(
+        jnp.asarray(state), jnp.asarray(aux), jnp.asarray(backlog))
+    np.testing.assert_array_equal(p, np.asarray(p_ref))
+    np.testing.assert_array_equal(c, np.asarray(c_ref))
+
+
+def test_hold_invariant_survives_migration():
+    """Kill a device mid-run under a holding threshold: the invariant
+    (held ⇒ zero blocks) holds on both sides of the migration, the
+    post-kill mask length tracks the survivor mesh, and the fixed point
+    stays bit-exact."""
+    g = _graph()
+    prog = sssp_bf(g)
+    mw = _mw(prog, g, model=plug.AsyncModel(theta0=10.0, decay=0.5),
+             kills=[(3, 2)])
+    res = mw.run(max_iterations=REF_MAX_IT)
+    assert res.converged
+    migs = [r["migration"] for r in res.per_iteration if "migration" in r]
+    assert len(migs) == 1
+    _assert_holds_ran_nothing(res)
+    assert len(res.per_iteration[-1]["run_mask"]) == migs[0]["devices_after"]
+    ref, _ = plug.run_reference(g, prog, max_iterations=REF_MAX_IT)
+    np.testing.assert_array_equal(ref, res.state)
+
+
+# --------------------------------------------------------------------------
+# satellite: NaN-proof priority for non-finite monoid identities
+# --------------------------------------------------------------------------
+def _inf_sssp(g):
+    """sssp_bf with a +inf identity (instead of the finite float32-max
+    the stock program uses): ``|inf - inf|`` is NaN, the regression
+    trigger for the async priority."""
+    prog = sssp_bf(g)
+    inf_min = Monoid("min", float("inf"), jnp.minimum, idempotent=True)
+
+    def init(graph):
+        state, aux = sssp_bf(graph).init(graph)
+        state[state >= np.finfo(np.float32).max] = np.inf
+        return state, aux
+
+    return dataclasses.replace(prog, monoid=inf_min, init=init)
+
+
+def test_async_priority_is_nan_proof_for_inf_identity():
+    """Regression: with a +inf identity, fresh slots that carried no
+    message are masked to the identity and ``|inf - inf| = NaN`` made
+    the priority NaN; ``NaN >= theta`` is silently False, so no device
+    ever refreshed until theta collapsed to the floor.  The canonical
+    priority must be finite and refresh on real movement while theta is
+    still far above the floor."""
+    g = _graph()
+    prog = _inf_sssp(g)
+    model = plug.AsyncModel(theta0=10.0, decay=0.5)
+    mw = _mw(prog, g, model=model)
+    assert mw._fused_kind == "async"
+    res = mw.run(max_iterations=REF_MAX_IT)
+    assert res.converged
+    # the discriminator: under the NaN bug every refresh waits for the
+    # theta floor; fixed, devices with real movement refresh while the
+    # threshold is still orders of magnitude above it
+    early = [r for r in res.per_iteration if r["theta"] > 1e3 * model.floor]
+    assert early and any(r["refreshed"] > 0 for r in early)
+    # and the fixed point matches the barriered run on the same program
+    bsp = _mw(prog, g, model="bsp").run(max_iterations=REF_MAX_IT)
+    np.testing.assert_array_equal(res.state, bsp.state)
+
+
+def test_merge_partials_async_unit_nan_canonicalization():
+    """Unit: feed the async merge held/fresh pairs whose no-message
+    slots sit at a +inf identity — the priority must be finite and the
+    moved device must refresh."""
+    g = _graph()
+    prog = _inf_sssp(g)
+    mw = _mw(prog, g, model="async")
+    upper = mw.upper
+    m, n, k = mw.daemon.m, mw.n, mw.k
+    held_p = np.full((m, n, k), np.inf, np.float32)
+    held_c = np.zeros((m, n), np.int32)
+    fresh_p = held_p.copy()
+    fresh_c = held_c.copy()
+    # device 0 produced one real message; everything else is identity
+    fresh_p[0, 0, :] = 1.0
+    fresh_c[0, 0] = 1
+    out = upper.merge_partials_async(
+        jnp.asarray(fresh_p), jnp.asarray(fresh_c), jnp.asarray(held_p),
+        jnp.asarray(held_c), jnp.float32(0.5), 1e-12)
+    refreshed, pri = np.asarray(out[4]), np.asarray(out[5])
+    assert np.all(np.isfinite(pri)), pri
+    assert refreshed[0]          # real movement clears theta
+    assert not refreshed[1:].any()  # identity-vs-identity scores 0 < theta
+
+
+# --------------------------------------------------------------------------
+# satellite: migrated backlog goes to the owning device only
+# --------------------------------------------------------------------------
+def test_device_source_masks_unit():
+    g = _graph()
+    mw = _mw(sssp_bf(g), g, model="async")
+    m = mw.daemon.m
+    masks = _device_source_masks(mw.partitions, m, g.num_vertices)
+    assert masks.shape == (m, g.num_vertices)
+    cap = len(mw.partitions) // m
+    for i in range(m):
+        owned = np.zeros(g.num_vertices, dtype=bool)
+        for p in mw.partitions[i * cap:(i + 1) * cap]:
+            owned[np.unique(np.asarray(p.src))] = True
+        np.testing.assert_array_equal(masks[i], owned)
+    # every source with an out-edge is owned by exactly the devices
+    # holding its shards — and nothing else is owned by anyone
+    has_edge = np.zeros(g.num_vertices, dtype=bool)
+    has_edge[np.unique(np.asarray(g.src))] = True
+    np.testing.assert_array_equal(masks.any(axis=0), has_edge)
+
+
+def test_migrated_backlog_lands_on_owner_only():
+    """After a kill the merged backlog is re-delivered per source to the
+    device owning its edges — not broadcast to every survivor."""
+    g = _graph()
+    prog = sssp_bf(g)
+    mw = _mw(prog, g, model=plug.AsyncModel(theta0=10.0, decay=0.5),
+             kills=[(3, 2)])
+    res = mw.run(max_iterations=REF_MAX_IT)
+    assert res.converged
+    # kill-under-async equivalence: the targeted delivery must preserve
+    # the bit-exact migrated fixed point
+    ref, _ = plug.run_reference(g, prog, max_iterations=REF_MAX_IT)
+    np.testing.assert_array_equal(ref, res.state)
+    # reconstruct what _migrate_carry delivers for an all-pending
+    # backlog: exactly the owner masks, not a broadcast — a source
+    # lands only on the device that can generate its messages
+    loop = mw._loop
+    m = mw.daemon.m
+    carry = list(loop._init_carry(
+        jnp.zeros((mw.n, mw.k), jnp.float32),
+        jnp.ones(mw.n, dtype=bool)))
+    carry[2] = jnp.ones((m, mw.n), dtype=bool)
+    migrated = loop._migrate_carry(tuple(carry))
+    backlog = np.asarray(jax.device_get(migrated[2]))
+    masks = _device_source_masks(mw.partitions, m, mw.n)
+    np.testing.assert_array_equal(backlog, masks)
+    assert masks.sum() < m * masks.any(axis=0).sum()  # strictly < broadcast
+
+
+# --------------------------------------------------------------------------
+# priority buckets: skew inside a held shard
+# --------------------------------------------------------------------------
+def test_bucket_runs_keep_fixed_point_bit_exact():
+    """bucket_k > 0 lets a held device push its top-k residual vertices
+    — extra (duplicated) messages under an idempotent monoid, so the
+    fixed point must not move."""
+    g = _graph()
+    prog = sssp_bf(g)
+    mw = _mw(prog, g,
+             model=plug.AsyncModel(theta0=10.0, decay=0.5, bucket_k=8),
+             instrument=True)
+    mw.daemon.reset_counters()
+    res = mw.run(max_iterations=REF_MAX_IT)
+    jax.effects_barrier()
+    assert res.converged
+    _assert_holds_ran_nothing(res)
+    assert "bucket" in mw.daemon.stacked  # adjacency armed
+    assert mw.daemon.bucket_invocations > 0  # holds ran their buckets
+    ref, _ = plug.run_reference(g, prog, max_iterations=REF_MAX_IT)
+    np.testing.assert_array_equal(ref, res.state)
+
+
+def test_buckets_disarmed_for_non_idempotent_monoids():
+    """SUM cannot tolerate duplicated bucket messages: configure_buckets
+    must force k to 0 and never stack the adjacency."""
+    g = _graph()
+    prog = pagerank(g)
+    mw = _mw(prog, g, model=plug.AsyncModel(theta0=1.0, decay=0.9,
+                                            bucket_k=8))
+    res = mw.run(max_iterations=120)
+    assert res.converged
+    assert mw.daemon._bucket_k == 0
+    assert "bucket" not in mw.daemon.stacked

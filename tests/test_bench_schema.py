@@ -209,6 +209,73 @@ def test_baseline_dynamic_pagerank_is_cold_fallback(baseline):
         assert cell["bit_identical"] is None
 
 
+ASYNC_SKEW_ARMS = ("eager", "holding", "buckets")
+
+
+def test_baseline_async_skew_table(baseline):
+    """The async-beats-BSP acceptance on a skewed power-law graph: every
+    arm must carry the skipped-Gen accounting (nonzero — a hold that
+    still runs its blocks is the bug the table guards against), the
+    per-iteration ratio against BSP (derived data, consistent with the
+    recorded cells and strictly below 1.0), and fixed-point bit-identity
+    with BSP (sssp's min monoid is idempotent)."""
+    ak = baseline["async_skew"]
+    assert ak["algorithm"] == "sssp_bf"
+    assert ak["graph"]["rmat"]["a"] > ak["graph"]["rmat"]["b"]  # skewed
+    assert ak["bsp"]["per_iter_s"] > 0 and ak["bsp"]["iterations"] >= 1
+    assert set(ak["configs"]) == set(ASYNC_SKEW_ARMS)
+    for row in ak["configs"].values():
+        assert row["per_iter_s"] > 0 and row["iterations"] >= 1
+        assert 0 < row["gen_skipped"] <= row["gen_total"]
+        assert row["skip_fraction"] == pytest.approx(
+            row["gen_skipped"] / row["gen_total"], rel=1e-9)
+        assert row["async_vs_bsp"] == pytest.approx(
+            row["per_iter_s"] / ak["bsp"]["per_iter_s"], rel=1e-9)
+        assert row["async_vs_bsp"] < 1.0
+        assert row["bit_identical"] is True
+    assert ak["configs"]["buckets"]["bucket_k"] > 0
+    assert ak["configs"]["holding"]["theta0"] > 0
+
+
+def _validate_async_skew():
+    sys.path.insert(0, str(REPO))
+    try:
+        from benchmarks.bench_accel import _validate_async_skew as fn
+    finally:
+        sys.path.pop(0)
+    return fn
+
+
+def _good_skew_table():
+    row = {"theta0": 10.0, "decay": 0.9, "bucket_k": 0, "per_iter_s": 5e-3,
+           "async_vs_bsp": 0.5, "iterations": 6, "gen_skipped": 27,
+           "gen_total": 48, "skip_fraction": 27 / 48, "bit_identical": True}
+    return {"algorithm": "sssp_bf", "num_shards": 8,
+            "bsp": {"per_iter_s": 1e-2, "iterations": 5},
+            "configs": {"holding": copy.deepcopy(row)}}
+
+
+def test_validate_async_skew_accepts_good_table():
+    table = _good_skew_table()
+    assert _validate_async_skew()(table) is table
+
+
+@pytest.mark.parametrize("patch,match", [
+    ({"gen_skipped": 0}, "gen_skipped=0"),
+    ({"bit_identical": False}, "diverged"),
+    ({"async_vs_bsp": 1.02}, "did not beat"),
+    ({"async_vs_bsp": float("nan")}, "did not beat"),
+])
+def test_validate_async_skew_refuses_to_record(patch, match):
+    """The refuse-to-record contract: a table where holds skipped
+    nothing, the fixed point diverged, or async lost to BSP must raise
+    at record time instead of silently pinning a regression."""
+    table = _good_skew_table()
+    table["configs"]["holding"].update(patch)
+    with pytest.raises(RuntimeError, match=match):
+        _validate_async_skew()(table)
+
+
 def test_baseline_compressed_wire_rows(baseline):
     """The sync-wire measurement: both sum-monoid workloads, byte
     accounting showing real volume reduction (int8 wire strictly below
